@@ -1,0 +1,111 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) from dry-run
+artifacts (benchmarks/artifacts/dryrun/*.json).
+
+    compute    = dot_FLOPs_per_device / peak_FLOPs          [s]
+    memory     = HLO_bytes_per_device / HBM_bw               [s]
+    collective = wire_bytes_per_device / (links × link_bw)   [s]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(3 usable links per chip on a 2D torus slice → axis-local traffic uses 1).
+MODEL_FLOPS: train = 6·N_active·tokens, prefill = 2·N_active·tokens,
+decode = 2·N_active·batch (+ attention KV reads folded into memory term).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.common import active_param_count
+
+DRYRUN = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+OUT = Path(__file__).resolve().parent / "artifacts" / "roofline.json"
+
+
+def model_flops_per_device(arch: str, shape: str, n_chips: int,
+                           params_active: int) -> float:
+    spec = SHAPES[shape]
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        total = 6.0 * params_active * tokens
+    elif spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        total = 2.0 * params_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * params_active * spec.global_batch
+    return total / n_chips
+
+
+def analyze_cell(rec: dict) -> dict:
+    n = rec["n_chips"]
+    flops = rec["dot_flops_per_device"]
+    hbm_bytes = rec["xla_bytes_accessed_per_device"]
+    wire = rec["collective_wire_total"]
+    compute_t = flops / PEAK_FLOPS_BF16
+    memory_t = hbm_bytes / HBM_BW
+    collective_t = wire / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": collective_t}
+    dominant = max(terms, key=terms.get)
+    # recompute from config (artifacts may carry a stale analytic count)
+    params_active = active_param_count(get_config(rec["arch"]))
+    mf = model_flops_per_device(rec["arch"], rec["shape"], n, params_active)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_t, "memory_s": memory_t,
+        "collective_s": collective_t, "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS_BF16) / bound if bound else 0.0,
+        "hbm_temp_gb": rec["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9,
+        "hbm_args_gb": rec["memory_analysis"].get("argument_size_in_bytes", 0) / 1e9,
+        "compile_seconds": rec["compile_seconds"],
+    }
+
+
+def run(mesh: str = "single") -> list[dict]:
+    cells = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            cells.append({"arch": rec["arch"], "shape": rec["shape"],
+                          "mesh": rec["mesh"],
+                          "skipped": rec.get("reason", rec.get("status"))})
+            continue
+        cells.append(analyze_cell(rec))
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(cells, indent=1))
+    return cells
+
+
+def markdown_table(cells: list[dict]) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"skip | — | — |")
+            continue
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.4f} | "
+            f"{c['memory_s']:.4f} | {c['collective_s']:.4f} | "
+            f"{c['dominant']} | {c['useful_flops_ratio']:.2f} | "
+            f"{c['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def bench_roofline() -> list[tuple]:
+    rows = []
+    cells = run("single")
+    ok = [c for c in cells if "skipped" not in c]
+    for c in ok:
+        rows.append((f"roofline.{c['arch']}.{c['shape']}", 0.0,
+                     f"dominant={c['dominant']};frac={c['roofline_fraction']:.3f}"))
+    if ok:
+        (Path(__file__).resolve().parent / "artifacts" /
+         "roofline.md").write_text(markdown_table(cells))
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark entry point — one function per paper table/figure plus the
+framework-level analyses.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small clusters only (A, C, F)")
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import (bench_planner_speed, bench_table1,
+                                         bench_timing, bench_trajectories)
+    from benchmarks.roofline import bench_roofline
+
+    table1_clusters = ("A", "C", "F") if args.quick else ("A", "B", "C",
+                                                          "D", "E", "F")
+    traj_clusters = ("A",) if args.quick else ("A", "B")
+
+    suites = [
+        ("table1", lambda: bench_table1(table1_clusters)),
+        ("trajectories", lambda: bench_trajectories(traj_clusters)),
+        ("timing", lambda: bench_timing(traj_clusters)),
+        ("planner_speed", bench_planner_speed),
+        ("roofline", bench_roofline),
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},-1,FAILED:{e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

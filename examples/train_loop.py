@@ -1,0 +1,14 @@
+"""End-to-end training driver example (reduced arch on CPU):
+
+    PYTHONPATH=src python examples/train_loop.py
+
+Full driver with checkpoints/restore: python -m repro.launch.train --help
+"""
+
+import subprocess
+import sys
+
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--arch", "qwen3-0.6b", "--steps", "30",
+                "--batch", "8", "--seq", "128"], check=True,
+               env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -1,0 +1,5 @@
+"""Compiled-HLO analysis: loop-aware FLOPs and collective-traffic parsing."""
+
+from .hlo import HloAnalysis, analyze_hlo
+
+__all__ = ["HloAnalysis", "analyze_hlo"]

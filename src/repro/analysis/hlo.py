@@ -1,0 +1,327 @@
+"""Loop-aware analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, but our
+models scan layers (and the loss scans sequence chunks), so both FLOPs and
+collective bytes would be understated by ~n_layers×.  This parser rebuilds
+the numbers correctly:
+
+* splits the HLO module into computations and builds a per-computation
+  symbol table (every instruction's result shape is printed even when
+  operand references are bare ``%names``);
+* counts matmul FLOPs from ``dot`` ops (2 · prod(batch+m+n dims) ·
+  prod(contracting dims), via the printed dims attributes) — dots are the
+  MXU-roofline-relevant compute;
+* sums collective wire bytes per device with the ring model
+  (all-gather (g−1)/g·R, all-reduce 2(g−1)/g·R, reduce-scatter (g−1)·R,
+  all-to-all (g−1)/g·R, permute R);
+* recovers each ``while`` loop's trip count from the constant bound in its
+  condition computation, and multiplies nested body costs accordingly.
+
+Scope notes: elementwise/transcendental FLOPs are ignored (MXU dots
+dominate every cell we analyze), and convolutions appear only in the SSD
+conv (counted as dots after lowering — XLA lowers the depthwise conv used
+here to mul+reduce fusions, which we fold into bytes, not FLOPs; the SSD
+conv is <0.1% of cell FLOPs).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "rhs_c": re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+    "rhs_b": re.compile(r"rhs_batch_dims=\{([0-9,]*)\}"),
+}
+_CALL_ATTR_RE = re.compile(r"(?:to_apply|calls|body|condition|branch_computations=\{)=?%?([\w.\-]+)")
+_CALLS_LIST_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_dims(attr: str) -> list[int]:
+    return [int(x) for x in attr.split(",")] if attr else []
+
+
+def _shape_list(type_str: str) -> list[tuple[str, list[int]]]:
+    return [(d, [int(x) for x in dims.split(",")] if dims else [])
+            for d, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(type_str):
+        total += math.prod(dims) * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)    # %name -> type_str
+
+
+@dataclass
+class HloAnalysis:
+    dot_flops: float
+    collective_wire: dict          # op -> bytes (loop-scaled, per device)
+    collective_counts: dict        # op -> dynamic executions
+    while_trips: dict              # while body name -> trip count
+    wire_breakdown: dict = field(default_factory=dict)  # (op,shape,src)->bytes
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective_wire.values()))
+
+
+def _split_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        stripped = re.sub(r"/\*.*?\*/", "", line).strip()
+        # computation header: "%name (params...) -> type {" (possibly with
+        # nested parens in the param list) or "ENTRY %name ... {"
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("->")[0]:
+            head = stripped.removeprefix("ENTRY").strip()
+            name = head.split("(", 1)[0].strip().lstrip("%").strip()
+            if name:
+                current = Computation(name)
+                comps[current.name] = current
+                continue
+        if current is None:
+            continue
+        m = _ASSIGN_RE.match(line)
+        if m:
+            rest = m.group(2)
+            op_m = _OPCODE_RE.search(rest)
+            if not op_m:
+                continue
+            type_str = rest[: op_m.start()]
+            ins = Instr(m.group(1), type_str, op_m.group(1), line)
+            current.instrs.append(ins)
+            current.shapes[ins.name] = ins.type_str
+    return comps
+
+
+def _dot_flops_of(ins: Instr, comp: Computation) -> float:
+    """FLOPs of a dot: 2 · prod(result dims) · prod(contracting dims)."""
+    result_shapes = _shape_list(ins.type_str)
+    if not result_shapes:
+        return 0.0
+    result_elems = math.prod(result_shapes[0][1]) if result_shapes[0][1] else 1
+    lhs_c = _DIMS_RE["lhs_c"].search(ins.line)
+    contracting = 1
+    if lhs_c:
+        # contracting dim sizes come from the lhs operand's shape
+        dims = _parse_dims(lhs_c.group(1))
+        # first operand reference after the opcode '('
+        call = ins.line.split(ins.opcode + "(", 1)[1]
+        operands = re.findall(r"%([\w.\-]+)", call)
+        if operands:
+            lhs_type = comp.shapes.get(operands[0], "")
+            lhs_shapes = _shape_list(lhs_type)
+            if lhs_shapes:
+                for d in dims:
+                    if d < len(lhs_shapes[0][1]):
+                        contracting *= lhs_shapes[0][1][d]
+    return 2.0 * result_elems * contracting
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _collective_of(ins: Instr) -> tuple[str, float, float] | None:
+    base = ins.opcode.replace("-start", "")
+    if base not in _COLLECTIVES:
+        return None
+    tokens = [math.prod(dims) * _DTYPE_BYTES.get(d, 4)
+              for d, dims in _shape_list(ins.type_str)]
+    if not tokens:
+        return None
+    if ins.opcode.endswith("-start") and len(tokens) > 1:
+        R = min(tokens) if base == "reduce-scatter" else max(tokens)
+    else:
+        R = sum(tokens)
+    g = _group_size(ins.line)
+    if base == "all-gather":
+        wire = R * (g - 1) / g
+    elif base == "all-reduce":
+        wire = 2 * R * (g - 1) / g
+    elif base == "reduce-scatter":
+        wire = R * (g - 1)
+    elif base == "all-to-all":
+        wire = R * (g - 1) / g
+    else:
+        wire = R
+    return base, wire, R
+
+
+def _trip_count(cond: Computation) -> int:
+    """lax.scan conditions compare a counter against a constant bound; the
+    largest integer constant in the condition is the trip count."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_RE.finditer(ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(text: str) -> HloAnalysis:
+    comps = _split_computations(text)
+
+    # the ENTRY-marked computation hosts the top-level program
+    entry_name = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            head = line.strip().removeprefix("ENTRY").strip()
+            entry_name = head.split("(", 1)[0].strip().lstrip("%").strip()
+            break
+    if (entry_name is None or entry_name not in comps) and comps:
+        entry_name = next(reversed(comps))       # ENTRY prints last
+
+    memo: dict[str, tuple[float, dict, dict]] = {}
+
+    def cost(comp_name: str, stack=()) -> tuple[float, dict, dict]:
+        if comp_name in memo:
+            return memo[comp_name]
+        if comp_name not in comps or comp_name in stack:
+            return 0.0, {}, {}
+        comp = comps[comp_name]
+        flops = 0.0
+        wire = {op: 0.0 for op in _COLLECTIVES}
+        counts = {op: 0 for op in _COLLECTIVES}
+
+        def add(sub_f, sub_w, sub_c, mult=1):
+            nonlocal flops
+            flops += sub_f * mult
+            for k in sub_w:
+                wire[k] = wire.get(k, 0.0) + sub_w[k] * mult
+                counts[k] = counts.get(k, 0) + sub_c.get(k, 0) * mult
+
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += _dot_flops_of(ins, comp)
+                continue
+            coll = _collective_of(ins)
+            if coll:
+                base, w, _ = coll
+                wire[base] += w
+                counts[base] += 1
+                continue
+            if ins.opcode == "while":
+                attrs = dict(re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                        ins.line))
+                body = attrs.get("body")
+                cond = attrs.get("condition")
+                known = _KNOWN_TRIP_RE.search(ins.line)
+                if known:
+                    trips = int(known.group(1))
+                else:
+                    trips = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    add(*cost(body, stack + (comp_name,)), mult=trips)
+                continue
+            for attr_m in _CALLS_LIST_RE.finditer(ins.line):
+                add(*cost(attr_m.group(1), stack + (comp_name,)))
+            br = _BRANCHES_RE.search(ins.line)
+            if br:
+                # conditional: count the most expensive branch
+                branch_costs = [cost(b.strip().lstrip("%"),
+                                     stack + (comp_name,))
+                                for b in br.group(1).split(",")]
+                if branch_costs:
+                    add(*max(branch_costs, key=lambda c: c[0]))
+        memo[comp_name] = (flops, wire, counts)
+        return memo[comp_name]
+
+    flops, wire, counts = cost(entry_name)
+    # per-(op, shape) attribution with loop multiplicity (for §Perf)
+    mults: dict[str, int] = {}
+
+    def mark(name: str, m: int, depth=0):
+        if name not in comps or depth > 12:
+            return
+        mults[name] = mults.get(name, 0) + m
+        for ins in comps[name].instrs:
+            if ins.opcode == "while":
+                attrs = dict(re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                        ins.line))
+                known = _KNOWN_TRIP_RE.search(ins.line)
+                t = (int(known.group(1)) if known
+                     else (_trip_count(comps[attrs["condition"]])
+                           if attrs.get("condition") in comps else 1))
+                mark(attrs.get("body", ""), m * t, depth + 1)
+            for cm in _CALLS_LIST_RE.finditer(ins.line):
+                mark(cm.group(1), m, depth + 1)
+
+    mark(entry_name, 1)
+    breakdown: dict[tuple, float] = {}
+    for cname, comp in comps.items():
+        m = mults.get(cname, 0)
+        if not m:
+            continue
+        for ins in comp.instrs:
+            coll = _collective_of(ins)
+            if coll:
+                base, w, _ = coll
+                meta = re.search(r'op_name="([^"]+)"', ins.line)
+                src = meta.group(1).split("/")[-1][:40] if meta else "?"
+                key = (base, ins.type_str.strip()[:44], src)
+                breakdown[key] = breakdown.get(key, 0.0) + w * m
+    trips = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                attrs = dict(re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                        ins.line))
+                if attrs.get("condition") in comps:
+                    trips[attrs.get("body", "?")] = _trip_count(
+                        comps[attrs["condition"]])
+    return HloAnalysis(
+        dot_flops=flops,
+        collective_wire={k: float(v) for k, v in wire.items()},
+        collective_counts={k: int(v) for k, v in counts.items()},
+        while_trips=trips,
+        wire_breakdown=dict(sorted(breakdown.items(),
+                                   key=lambda kv: -kv[1])[:40]),
+    )

@@ -1,0 +1,8 @@
+"""Distributed checkpointing: Equilibrium-placed shards, atomic manifests,
+elastic restore."""
+
+from .checkpoint import (latest_step, restore_checkpoint, save_checkpoint)
+from .placement import CheckpointPlacement, StorageHost, plan_placement
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointPlacement", "StorageHost", "plan_placement"]

@@ -1,0 +1,8 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` +
+``input_specs(arch_id, shape_id)`` for every (arch × shape) dry-run cell."""
+
+from .registry import (ARCHS, SHAPES, get_config, input_specs, list_cells,
+                       shape_skip_reason)
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "input_specs", "list_cells",
+           "shape_skip_reason"]

@@ -1,0 +1,14 @@
+"""gemma2-9b [dense] — 42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000; local+global alternating attention (window 4096), attn logit
+softcap 50, final logit softcap 30.  [arXiv:2408.00118; hf]"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=14336, vocab_size=256000, mlp_act="gelu",
+    sliding_window=4096, swa_pattern="alternating",
+    attn_softcap=50.0, final_softcap=30.0,
+    train_microbatches=2,
+)

@@ -1,0 +1,12 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8)
+d_ff=512/expert vocab=49155; MoE 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base family; hf]"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size=49155, mlp_act="silu",
+    n_experts=40, top_k=8, train_microbatches=4,
+)

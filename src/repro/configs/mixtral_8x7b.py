@@ -1,0 +1,14 @@
+"""mixtral-8x7b [moe] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000; MoE 8 experts top-2; all-layer SWA (window 4096).
+[arXiv:2401.04088; hf]"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=32000, mlp_act="silu",
+    n_experts=8, top_k=2,
+    sliding_window=4096, swa_pattern="all",
+    train_microbatches=4,
+)

@@ -1,0 +1,14 @@
+"""qwen2-vl-72b [vlm] — 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064; M-RoPE (t,h,w)=(16,24,24), dynamic resolution.  The vision
+frontend is a STUB: input_specs provides precomputed patch embeddings
+(DESIGN.md §6).  [arXiv:2409.12191; hf]"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=29568, vocab_size=152064, mlp_act="silu",
+    mrope_sections=(16, 24, 24), rope_theta=1_000_000.0,
+    input_mode="patches", train_microbatches=4,
+)

@@ -1,0 +1,137 @@
+"""Architecture × input-shape registry (the 40 dry-run cells).
+
+``SHAPES`` are the assigned LM shapes: ``train_4k`` lowers ``train_step``;
+``prefill_32k`` lowers the prefill trunk; ``decode_32k`` / ``long_500k``
+lower ``serve_step`` (one token against a seq_len-sized cache).
+
+Skips (per assignment + DESIGN.md §6): ``long_500k`` requires a
+sub-quadratic arch — run for mamba2 (SSM), zamba2 (hybrid) and mixtral
+(all-layer SWA rolling window); skipped for the pure full-attention archs
+and for gemma2 (alternating local/global keeps full-KV layers).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.lm import cache_spec
+
+ARCHS = {
+    "stablelm-12b": "stablelm_12b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "granite-8b": "granite_8b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-7b": "zamba2_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# enc-dec split: the seq budget goes to the encoder (audio frames); decoder
+# text length is seq/4 (train/prefill) — documented design choice.
+ENC_DEC_RATIO = 4
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def shape_skip_reason(arch: str, shape: str) -> str | None:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not cfg.sub_quadratic:
+        if cfg.swa_pattern == "alternating":
+            return ("skipped: alternating local/global keeps full-attention "
+                    "layers (not sub-quadratic)")
+        return "skipped: pure full-attention arch (long_500k needs sub-quadratic)"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell —
+    weak-type-correct, shardable, zero allocation."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    tok = jnp.int32
+    act = jnp.bfloat16
+
+    if spec.kind in ("train", "prefill"):
+        batch: dict = {}
+        if cfg.is_enc_dec:
+            batch["enc_embeds"] = _sds((B, S, cfg.d_model), act)
+            S_dec = max(S // ENC_DEC_RATIO, 128)
+            batch["tokens"] = _sds((B, S_dec), tok)
+            if spec.kind == "train":
+                batch["labels"] = _sds((B, S_dec), tok)
+        elif cfg.input_mode == "patches":
+            # vlm stub frontend: 1024 precomputed patch embeddings spliced
+            # ahead of the text tokens (DESIGN.md §6)
+            n_p = min(1024, S // 4)
+            batch["tokens"] = _sds((B, S), tok)
+            batch["patch_embeds"] = _sds((B, n_p, cfg.d_model), act)
+            if cfg.mrope_sections is not None:
+                batch["positions"] = _sds((3, B, S), tok)
+            if spec.kind == "train":
+                batch["labels"] = _sds((B, S), tok)
+        elif cfg.input_mode == "embeds":
+            batch["embeds"] = _sds((B, S, cfg.d_model), act)
+            if cfg.mrope_sections is not None:
+                batch["positions"] = _sds((3, B, S), tok)
+            if spec.kind == "train":
+                batch["labels"] = _sds((B, S), tok)
+        else:
+            batch["tokens"] = _sds((B, S), tok)
+            if cfg.mrope_sections is not None:
+                batch["positions"] = _sds((3, B, S), tok)
+            if spec.kind == "train":
+                batch["labels"] = _sds((B, S), tok)
+        return batch
+
+    # decode: one new token + statically-shaped caches of length seq_len
+    inputs = {
+        "tokens": _sds((B, 1), tok),
+        "cache": cache_spec(cfg, B, S),
+    }
+    if cfg.is_enc_dec:
+        inputs["enc_out"] = _sds((B, max(S // 8, 128), cfg.d_model), act)
+    return inputs
+
+
+def list_cells(include_skipped: bool = False):
+    """All (arch, shape) cells, optionally with skip reasons."""
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            reason = shape_skip_reason(arch, shape)
+            if reason is None or include_skipped:
+                cells.append((arch, shape, reason))
+    return cells

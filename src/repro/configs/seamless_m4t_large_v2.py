@@ -1,0 +1,13 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, 24L+24L d_model=1024 16H
+(kv=16 ⇒ MHA) d_ff=8192 vocab=256206.  The speech frontend is a STUB:
+input_specs provides precomputed frame embeddings for the encoder
+(DESIGN.md §6).  [arXiv:2308.11596; hf]"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    n_layers=24, n_enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    head_dim=64, d_ff=8192, vocab_size=256206, mlp_act="gelu",
+    train_microbatches=4,
+)

@@ -1,0 +1,20 @@
+"""Core: the paper's contribution — size-aware shard balancing (Equilibrium),
+the mgr-balancer baseline, the cluster model, and the simulation harness."""
+
+from .cluster import (ClusterState, Device, Movement, PlacementRule, Pool,
+                      RuleStep, TiB, GiB)
+from .crush import build_cluster, place_pg
+from .clustergen import PAPER_CLUSTERS, small_test_cluster
+from .equilibrium import EquilibriumConfig, balance as equilibrium_balance
+from .equilibrium_jax import DenseState, balance_fast
+from .mgr_balancer import MgrBalancerConfig, balance as mgr_balance
+from .simulate import SimulationResult, compare_balancers, simulate
+
+__all__ = [
+    "ClusterState", "Device", "Movement", "PlacementRule", "Pool", "RuleStep",
+    "TiB", "GiB", "build_cluster", "place_pg", "PAPER_CLUSTERS",
+    "small_test_cluster", "EquilibriumConfig", "equilibrium_balance",
+    "DenseState", "balance_fast",
+    "MgrBalancerConfig", "mgr_balance", "SimulationResult",
+    "compare_balancers", "simulate",
+]

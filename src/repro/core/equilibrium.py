@@ -1,0 +1,170 @@
+"""Equilibrium: the paper's size-aware shard balancer (§3.1), faithful.
+
+Per generated move:
+
+1. **Source selection** — devices sorted by relative utilization
+   (used/capacity) in the *current simulated target state*, descending.
+   The fullest device is the source candidate; if it yields no legal move
+   we fall through to the next-fullest, up to the ``k`` fullest (paper
+   default k=25), then terminate.
+2. **Shard choice** — shards on the source are tried **largest first**.
+3. **Destination assignment** — candidate destinations are scanned
+   emptiest-first and a move is accepted only if
+   (a) the pool's CRUSH rule remains satisfied,
+   (b) both endpoints' PG-shard counts move toward (or stay within
+   ``count_slack`` of) the pool's per-device ideal, and
+   (c) cluster-wide utilization variance strictly decreases.
+4. **Apply** — the move is applied to the simulated state, utilizations are
+   recalculated, and the loop continues until no source yields a move.
+
+Acceptance criterion (c) makes each emitted move a strict improvement, so
+the sequence converges (variance is bounded below by 0 and decreases by a
+positive amount each move; see tests/test_equilibrium.py property tests).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cluster import ClusterState, Movement, PGId
+
+
+@dataclass
+class EquilibriumConfig:
+    k: int = 25                     # paper: try the k fullest sources
+    count_slack: float = 0.0        # tolerance on ideal-count criterion
+    headroom: float = 0.0           # destination capacity headroom fraction
+    max_moves: int = 100_000
+    min_variance_delta: float = 0.0  # require strictly better than this
+
+
+@dataclass
+class MoveRecord:
+    movement: Movement
+    variance_after: float
+    free_space_after: float
+    planning_seconds: float
+    sources_tried: int
+
+
+def _count_criterion(state: ClusterState, pg: PGId, src_idx: int, dst_idx: int,
+                     ideal_cache: dict[int, np.ndarray], slack: float) -> bool:
+    """Both endpoints must approach their ideal pool shard count (§3.1
+    'Improving the ideal pool PG shard count for the source and
+    destination OSD'), within ``slack`` shards of tolerance."""
+    pool_id = pg[0]
+    if pool_id not in ideal_cache:
+        ideal_cache[pool_id] = state.ideal_shard_count(state.pools[pool_id])
+    ideal = ideal_cache[pool_id]
+    counts = state.pool_counts[pool_id]
+    src_old = abs(counts[src_idx] - ideal[src_idx])
+    src_new = abs(counts[src_idx] - 1 - ideal[src_idx])
+    dst_old = abs(counts[dst_idx] - ideal[dst_idx])
+    dst_new = abs(counts[dst_idx] + 1 - ideal[dst_idx])
+    return (src_new <= src_old + slack) and (dst_new <= dst_old + slack)
+
+
+class _IncrementalVariance:
+    """O(1)-per-move tracker of utilization mean/second-moment."""
+
+    def __init__(self, used: np.ndarray, cap: np.ndarray):
+        self.cap = cap
+        self.util = used / cap
+        self.sum = float(self.util.sum())
+        self.sumsq = float((self.util**2).sum())
+        self.n = used.shape[0]
+
+    def variance(self) -> float:
+        return self.sumsq / self.n - (self.sum / self.n) ** 2
+
+    def delta(self, src_idx: int, dst_idx: int, size: float) -> float:
+        u_s, u_d = self.util[src_idx], self.util[dst_idx]
+        v_s = u_s - size / self.cap[src_idx]
+        v_d = u_d + size / self.cap[dst_idx]
+        dsum = (v_s - u_s) + (v_d - u_d)
+        dsq = (v_s**2 - u_s**2) + (v_d**2 - u_d**2)
+        new_var = (self.sumsq + dsq) / self.n - ((self.sum + dsum) / self.n) ** 2
+        return new_var - self.variance()
+
+    def commit(self, src_idx: int, dst_idx: int, size: float) -> None:
+        for i, s in ((src_idx, -size), (dst_idx, +size)):
+            u_old = self.util[i]
+            u_new = u_old + s / self.cap[i]
+            self.sum += u_new - u_old
+            self.sumsq += u_new**2 - u_old**2
+            self.util[i] = u_new
+
+
+def plan_one_move(state: ClusterState, cfg: EquilibriumConfig,
+                  tracker: _IncrementalVariance) -> tuple[Movement | None, int]:
+    """Generate the next movement (or None), per §3.1.
+
+    Returns (movement, sources_tried).
+    """
+    cap = state.capacity_vector()
+    used = state.used()
+    util = used / cap
+    src_order = np.argsort(-util, kind="stable")[: cfg.k]
+    dst_order = np.argsort(util, kind="stable")
+    ideal_cache: dict[int, np.ndarray] = {}
+
+    for tried, src_idx in enumerate(src_order, start=1):
+        src_idx = int(src_idx)
+        src_osd = state.devices[src_idx].id
+        # largest shard first (deterministic tie-break on pg id / slot)
+        shards = sorted(state.shards_on[src_osd],
+                        key=lambda s: (-state.shard_sizes[s[0]], s[0], s[1]))
+        for (pg, slot) in shards:
+            size = state.shard_sizes[pg]
+            if size <= 0.0:
+                continue
+            for dst_i in dst_order:
+                dst_i = int(dst_i)
+                if dst_i == src_idx:
+                    break           # destinations fuller than source are useless
+                dst_osd = state.devices[dst_i].id
+                if not state.move_is_legal(pg, slot, dst_osd, headroom=cfg.headroom):
+                    continue
+                if not _count_criterion(state, pg, src_idx, dst_i,
+                                        ideal_cache, cfg.count_slack):
+                    continue
+                if tracker.delta(src_idx, dst_i, size) >= -cfg.min_variance_delta:
+                    continue        # must strictly reduce variance
+                return (Movement(pg, slot, src_osd, dst_osd, size), tried)
+    return None, len(src_order)
+
+
+def balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
+            record_trajectory: bool = False, record_free_space: bool = True):
+    """Run Equilibrium to convergence on ``state`` (mutated in place).
+
+    Returns (movements, records) — ``records`` carries per-move metrics
+    (variance, free space, planning time, sources tried) used by the
+    Fig 4/5/6 benchmarks.
+    """
+    cfg = cfg or EquilibriumConfig()
+    tracker = _IncrementalVariance(state.used(), state.capacity_vector())
+    movements: list[Movement] = []
+    records: list[MoveRecord] = []
+    while len(movements) < cfg.max_moves:
+        t0 = time.perf_counter()
+        mv, tried = plan_one_move(state, cfg, tracker)
+        dt = time.perf_counter() - t0
+        if mv is None:
+            break
+        tracker.commit(state.idx(mv.src_osd), state.idx(mv.dst_osd), mv.size)
+        state.apply(mv)
+        movements.append(mv)
+        if record_trajectory:
+            records.append(MoveRecord(
+                movement=mv,
+                variance_after=state.utilization_variance(),
+                free_space_after=(state.total_pool_free_space()
+                                  if record_free_space else float("nan")),
+                planning_seconds=dt,
+                sources_tried=tried,
+            ))
+    return movements, records

@@ -1,0 +1,103 @@
+"""Baseline: Ceph's built-in ``mgr balancer`` (upmap mode), reimplemented.
+
+Semantics mirror ``osdmaptool <map> --upmap out --upmap-max N
+--upmap-deviation 1`` as described in the paper (§2.3.1) and the Ceph
+sources' documented behavior:
+
+* operates **per pool, independently** — no cross-pool view;
+* optimizes **PG-shard counts** toward each device's ideal count for the
+  pool (capacity-weighted), entirely **size-blind** (neither device fill
+  level nor shard size is consulted);
+* a move is accepted if it brings both endpoints' counts closer to ideal
+  and respects the CRUSH rule;
+* candidate-selection limitation (§2.3.1): sources are tried from the
+  highest count-deviation down; if the current worst source has no legal
+  move the pool's optimization **aborts** rather than falling through to
+  other devices — faithfully reproducing the early-stop the paper calls out;
+* stops at max |count − ideal| ≤ ``deviation`` (default 1, as in the
+  paper's invocation) or after ``max_moves``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .cluster import ClusterState, Movement
+
+
+@dataclass
+class MgrBalancerConfig:
+    deviation: float = 1.0          # --upmap-deviation
+    max_moves: int = 10_000         # --upmap-max
+    headroom: float = 0.0
+
+
+def _pool_round(state: ClusterState, pool_id: int,
+                cfg: MgrBalancerConfig) -> Movement | None:
+    """One attempted move for one pool; None if the pool aborts."""
+    pool = state.pools[pool_id]
+    ideal = state.ideal_shard_count(pool)
+    counts = state.pool_counts[pool_id].astype(np.float64)
+    deviation = counts - ideal
+    src_idx = int(np.argmax(deviation))
+    if deviation[src_idx] <= cfg.deviation:
+        return None                                    # pool is balanced
+    src_osd = state.devices[src_idx].id
+
+    # destinations: lowest deviation first (size-blind)
+    order = np.argsort(deviation, kind="stable")
+    # shards of this pool on the source, in arbitrary (slot) order — the
+    # mgr balancer does not consider shard size.
+    shards = sorted((pg, slot) for (pg, slot) in state.shards_on[src_osd]
+                    if pg[0] == pool_id)
+    for di in order:
+        dst_osd = state.devices[int(di)].id
+        if dst_osd == src_osd:
+            continue
+        if deviation[di] >= deviation[src_idx] - 1.0:
+            break                                      # no count improvement possible
+        for (pg, slot) in shards:
+            if state.move_is_legal(pg, slot, dst_osd, headroom=cfg.headroom):
+                return Movement(pg, slot, src_osd, dst_osd, state.shard_sizes[pg])
+    # §2.3.1: the built-in balancer gives up on the pool instead of trying
+    # the next-worst source.
+    return None
+
+
+def balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
+            record_trajectory: bool = False):
+    """Generate movements until every pool is count-balanced or aborts.
+
+    Returns (movements, trajectory) where trajectory logs cluster metrics
+    after each applied move when requested. ``state`` is mutated to the
+    simulated target state, as both balancers plan against their own
+    projected state (§3.1).
+    """
+    cfg = cfg or MgrBalancerConfig()
+    movements: list[Movement] = []
+    trajectory: list[dict] = []
+    active = set(state.pools.keys())
+    while active and len(movements) < cfg.max_moves:
+        progressed = False
+        for pool_id in sorted(active):
+            mv = _pool_round(state, pool_id, cfg)
+            if mv is None:
+                active.discard(pool_id)
+                continue
+            state.apply(mv)
+            movements.append(mv)
+            progressed = True
+            if record_trajectory:
+                trajectory.append({
+                    "move": len(movements),
+                    "variance": state.utilization_variance(),
+                    "free_space": state.total_pool_free_space(),
+                    "moved_bytes": mv.size,
+                })
+            if len(movements) >= cfg.max_moves:
+                break
+        if not progressed:
+            break
+    return movements, trajectory

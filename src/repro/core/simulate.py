@@ -1,0 +1,104 @@
+"""Movement simulation + evaluation harness (paper §3.2).
+
+Both balancers emit movement instructions against a *copy* of the cluster
+state; this module replays those instructions on a fresh copy to measure
+what the paper's Table 1 and Figures 4–6 report:
+
+* gained pool free space (sum over user-data pools of max-avail delta),
+* total moved bytes,
+* utilization variance trajectory (cluster-wide and per device class),
+* per-pool free-space trajectories.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cluster import ClusterState, Movement
+
+
+@dataclass
+class SimulationResult:
+    moves_applied: int
+    moved_bytes: float
+    free_before: float
+    free_after: float
+    variance_before: float
+    variance_after: float
+    variance_by_class_before: dict[str, float]
+    variance_by_class_after: dict[str, float]
+    pool_free_before: dict[int, float]
+    pool_free_after: dict[int, float]
+    # per-move trajectories (index 0 = initial state)
+    variance_trajectory: np.ndarray = field(default=None)
+    free_trajectory: np.ndarray = field(default=None)
+    moved_bytes_trajectory: np.ndarray = field(default=None)
+
+    @property
+    def gained_free_space(self) -> float:
+        return self.free_after - self.free_before
+
+
+def device_classes(state: ClusterState) -> list[str]:
+    return sorted({d.device_class for d in state.devices})
+
+
+def simulate(initial: ClusterState, movements: list[Movement],
+             record_trajectory: bool = True,
+             trajectory_stride: int = 1) -> SimulationResult:
+    """Replay ``movements`` on a copy of ``initial`` and measure effects."""
+    state = initial.copy()
+    classes = device_classes(state)
+    free_before = state.total_pool_free_space()
+    var_before = state.utilization_variance()
+    var_class_before = {c: state.utilization_variance(c) for c in classes}
+    pool_free_before = {pid: state.pool_free_space(pid) for pid in state.pools}
+
+    var_traj = [var_before]
+    free_traj = [free_before]
+    moved_traj = [0.0]
+    moved = 0.0
+    for i, mv in enumerate(movements):
+        state.apply(mv)
+        moved += mv.size
+        if record_trajectory and (i % trajectory_stride == 0 or i == len(movements) - 1):
+            var_traj.append(state.utilization_variance())
+            free_traj.append(state.total_pool_free_space())
+            moved_traj.append(moved)
+
+    state.check_valid()
+    return SimulationResult(
+        moves_applied=len(movements),
+        moved_bytes=moved,
+        free_before=free_before,
+        free_after=state.total_pool_free_space(),
+        variance_before=var_before,
+        variance_after=state.utilization_variance(),
+        variance_by_class_before=var_class_before,
+        variance_by_class_after={c: state.utilization_variance(c) for c in classes},
+        pool_free_before=pool_free_before,
+        pool_free_after={pid: state.pool_free_space(pid) for pid in state.pools},
+        variance_trajectory=np.array(var_traj) if record_trajectory else None,
+        free_trajectory=np.array(free_traj) if record_trajectory else None,
+        moved_bytes_trajectory=np.array(moved_traj) if record_trajectory else None,
+    )
+
+
+def compare_balancers(initial: ClusterState, mgr_movements: list[Movement],
+                      eq_movements: list[Movement]) -> dict:
+    """Table-1 style comparison row for one cluster."""
+    mgr = simulate(initial, mgr_movements, record_trajectory=False)
+    eq = simulate(initial, eq_movements, record_trajectory=False)
+    return {
+        "default_gained_free_space": mgr.gained_free_space,
+        "ours_gained_free_space": eq.gained_free_space,
+        "default_moved_bytes": mgr.moved_bytes,
+        "ours_moved_bytes": eq.moved_bytes,
+        "default_moves": mgr.moves_applied,
+        "ours_moves": eq.moves_applied,
+        "default_variance_after": mgr.variance_after,
+        "ours_variance_after": eq.variance_after,
+        "variance_before": mgr.variance_before,
+    }

@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic token source, Equilibrium shard assignment,
+prefetching loader."""
+
+from .pipeline import (DataShard, ShardAssignment, SyntheticTokenSource,
+                       TokenLoader, assign_shards)
+
+__all__ = ["DataShard", "ShardAssignment", "SyntheticTokenSource",
+           "TokenLoader", "assign_shards"]

@@ -1,0 +1,11 @@
+"""Fault tolerance: failure detection, Equilibrium-planned recovery,
+elastic rescale, straggler mitigation."""
+
+from .failures import FailureDetector
+from .recovery import plan_recovery, RecoveryPlan
+from .elastic import plan_rescale, RescalePlan
+from .stragglers import StragglerMitigator, simulate_epoch
+
+__all__ = ["FailureDetector", "plan_recovery", "RecoveryPlan",
+           "plan_rescale", "RescalePlan", "StragglerMitigator",
+           "simulate_epoch"]

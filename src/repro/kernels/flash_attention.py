@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+TPU-native schedule: the grid's last dimension iterates KV blocks
+*sequentially* (TPU grids execute in order), so the online-softmax state
+(m, l, acc) lives in VMEM scratch and is carried across grid steps —
+no HBM round-trips for the accumulator, one (block_q × block_k) MXU tile
+in flight at a time.  This is the paper's-framework hot-spot kernel
+(attention dominates the train/prefill cells' compute term); the paper
+itself has no kernel-level contribution (DESIGN.md §4).
+
+Layout: q/k/v are (BH, T, Dh) — batch×heads flattened outside (GQA k/v
+repeated to full heads by ops.py, matching the model's TP layout).  Block
+sizes default to (128, 512): multiples of the 128-lane MXU tiling, and a
+working set of 2·(512×Dh) + (128×Dh) + (128×512) floats ≲ 1.5 MB for
+Dh=128 — comfortably inside the ~16 MB VMEM budget with double buffering.
+
+Masking (causal / sliding window / length) is positional arithmetic done
+in-kernel; the logit softcap (gemma2) is tanh-applied before masking.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+NO_WINDOW = 1 << 30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale: float, causal: bool, window: int,
+                      cap: float | None, block_q: int, block_k: int,
+                      kv_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (bq,)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])                  # (bq, bk)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        cap: float | None = None, scale: float | None = None,
+                        block_q: int = 128, block_k: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q/k/v: (BH, Tq, Dh) / (BH, Tk, Dh) / (BH, Tk, Dh) → (BH, Tq, Dh)."""
+    BH, Tq, Dh = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    window = NO_WINDOW if window is None else int(window)
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    nq = -(-Tq // block_q)
+    nk = -(-Tk // block_k)
+    pad_q = nq * block_q - Tq
+    pad_k = nk * block_k - Tk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, window=window,
+        cap=cap, block_q=block_q, block_k=block_k, kv_len=Tk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * block_q, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Tq]

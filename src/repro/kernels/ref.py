@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, cap=None,
+                        scale=None):
+    """(BH, Tq, Dh) full-softmax attention reference."""
+    BH, Tq, Dh = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    logits = jnp.einsum("btd,bud->btu", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    q_pos = jnp.arange(Tq)[:, None]
+    k_pos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("btu,bud->btd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Token-level SSD recurrence reference.
+
+    x (BH, T, P); dt (BH, T); A (BH,); Bm/Cm (BH, T, N) — the per-(batch,
+    head) flattened layout the kernel uses.  Returns (y (BH,T,P), final
+    state (BH,P,N))."""
+    BH, T, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, t):
+        decay = jnp.exp(dt[:, t] * A)                       # (BH,)
+        contrib = jnp.einsum("bn,bp->bpn", Bm[:, t] * dt[:, t][:, None],
+                             x[:, t].astype(jnp.float32))
+        h = h * decay[:, None, None] + contrib
+        y = jnp.einsum("bn,bpn->bp", Cm[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((BH, P, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, jnp.arange(T))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

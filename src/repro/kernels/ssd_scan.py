@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (forward).
+
+Grid: (BH, n_chunks) with the chunk dimension iterated sequentially —
+the (P, N) state lives in VMEM scratch and is carried across chunks, so
+the inter-chunk recurrence never leaves VMEM.  Within a chunk the dual
+quadratic form runs on the MXU: an (Q × Q) decay-masked score matrix and
+two (Q × P/N) contractions.
+
+Layout: per-(batch·head) flattened — x (BH, T, P), dt (BH, T),
+A (BH,), B/C (BH, T, N) (groups are broadcast to heads by ops.py).  Block
+sizes: Q=chunk (default 128, a multiple of the 8×128 VPU tile), working
+set ≈ Q·(P+2N) + Q² + P·N floats ≈ 0.4 MB at Q=128, P=64, N=128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0].astype(jnp.float32)           # scalar
+    Bm = b_ref[0].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    dtA = dt * A                               # (Q,) negative
+    acum = jnp.cumsum(dtA)                     # inclusive
+    # intra-chunk dual form
+    Lmat = acum[:, None] - acum[None, :]       # (Q, Q): t, u
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    Lmat = jnp.where(tri, jnp.exp(Lmat), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = scores * Lmat * dt[None, :]       # weight by dt_u
+    y_intra = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # carried-state contribution
+    state = state_ref[...]                     # (P, N)
+    y_inter = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(acum)[:, None]
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state update
+    total = acum[-1]
+    decay_tail = jnp.exp(total - acum)         # (Q,)
+    weighted_b = Bm * (dt * decay_tail)[:, None]            # (Q, N)
+    contrib = jax.lax.dot_general(x, weighted_b, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state_ref[...] = state * jnp.exp(total) + contrib
+
+
+def ssd_scan_fwd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, *, chunk: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """x (BH,T,P), dt (BH,T), A (BH,), B/C (BH,T,N) → y (BH,T,P)."""
+    BH, T, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, "T must be chunk-aligned"
+    nc = T // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

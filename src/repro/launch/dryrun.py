@@ -1,0 +1,296 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices stand in for 2 pods × 256 chips.  Per cell we record
+``memory_analysis()`` (fits-in-HBM evidence), ``cost_analysis()``
+(FLOPs/bytes for §Roofline) and the collective-op byte volume parsed from
+the post-SPMD HLO (§Roofline's third term).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+"""
+
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# on first initialization.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCHS, SHAPES, get_config, input_specs,
+                           shape_skip_reason)
+from repro.models.common import active_param_count, param_count
+from repro.models.lm import abstract_params, decode_step, prefill
+from repro.sharding.specs import (batch_specs, cache_specs, opt_state_specs,
+                                  param_specs)
+from repro.train.train_step import abstract_train_state, make_train_step
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic from the post-SPMD HLO.
+
+    For each op we take the result shape(s) + replica-group size g and
+    derive (a) ``operand`` bytes (the tensor entering the op on this
+    device) and (b) ``wire`` bytes — ring-algorithm bytes moved per device:
+    all-gather (g−1)/g·R, all-reduce 2(g−1)/g·R, reduce-scatter (g−1)·R,
+    all-to-all (g−1)/g·R, collective-permute R.  The §Roofline collective
+    term uses ``wire``.
+    """
+    wire = {op: 0.0 for op in _COLLECTIVES}
+    operand = {op: 0.0 for op in _COLLECTIVES}
+    counts = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        tokens = [_shape_bytes(d, s)
+                  for d, s in _SHAPE_RE.findall(m.group(1))]
+        if not tokens:
+            continue
+        is_start = m.group(3) is not None
+        g = _group_size(line)
+        if is_start and len(tokens) > 1:
+            # async start: result is a (operand, result) tuple
+            R = min(tokens) if op == "reduce-scatter" else max(tokens)
+        else:
+            R = sum(tokens)        # tuple all-reduce: sum the members
+        if op == "all-gather":
+            opnd, w = R / g, R * (g - 1) / g
+        elif op == "all-reduce":
+            opnd, w = R, 2 * R * (g - 1) / g
+        elif op == "reduce-scatter":
+            opnd, w = R * g, R * (g - 1)
+        elif op == "all-to-all":
+            opnd, w = R, R * (g - 1) / g
+        else:                       # collective-permute
+            opnd, w = R, R
+        wire[op] += w
+        operand[op] += opnd
+        counts[op] += 1
+    return {"by_op": {k: int(v) for k, v in wire.items()},
+            "operand_by_op": {k: int(v) for k, v in operand.items()},
+            "counts": counts,
+            "total": int(sum(wire.values()))}
+
+
+def _sharding_tree(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape: str, mesh):
+    """Returns (fn, example_args, in_shardings, donate_argnums)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    inputs = input_specs(arch, shape)
+
+    if spec.kind == "train":
+        state = abstract_train_state(cfg)
+        ps = param_specs(cfg, mesh)
+        state_spec = {"params": ps, "opt": opt_state_specs(cfg, mesh),
+                      "step": P()}
+        bspec = batch_specs(cfg, mesh, inputs)
+        from repro.train.train_step import TrainConfig
+        step = make_train_step(cfg, TrainConfig(
+            microbatches=cfg.train_microbatches,
+            zero1_compute_params=cfg.zero1_compute_params))
+        return (step, (state, inputs),
+                (_sharding_tree(state_spec, mesh), _sharding_tree(bspec, mesh)),
+                (0,))
+
+    params = abstract_params(cfg)
+    # serving runs bf16 weights
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 and len(s.shape) >= 2 else s, params)
+    ps = param_specs(cfg, mesh)
+
+    if spec.kind == "prefill":
+        bspec = batch_specs(cfg, mesh, inputs)
+        fn = lambda p, b: prefill(p, b, cfg)
+        return (fn, (params, inputs),
+                (_sharding_tree(ps, mesh), _sharding_tree(bspec, mesh)), ())
+
+    # decode
+    cache = inputs["cache"]
+    cspec = cache_specs(cfg, mesh, cache, spec.global_batch)
+    tok_spec = {"tokens": P(("pod", "data") if "pod" in mesh.axis_names
+                            else ("data",),) if spec.global_batch > 1 else P(None)}
+    args = [params, cache, inputs["tokens"]]
+    shardings = [_sharding_tree(ps, mesh), _sharding_tree(cspec, mesh),
+                 NamedSharding(mesh, tok_spec["tokens"])]
+    if "enc_out" in inputs:
+        baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        b_ax = baxes if inputs["enc_out"].shape[0] % 2 == 0 else None
+        fn = lambda p, c, t, e: decode_step(p, c, t, cfg, enc_out=e)
+        args.append(inputs["enc_out"])
+        shardings.append(NamedSharding(mesh, P(b_ax, None, None)))
+    else:
+        fn = lambda p, c, t: decode_step(p, c, t, cfg)
+    return fn, tuple(args), tuple(shardings), (1,)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path) -> dict:
+    reason = shape_skip_reason(arch, shape)
+    result = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if reason is not None:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = get_config(arch)
+    n_chips = mesh.devices.size
+    fn, args, in_shard, donate = build_cell(arch, shape, mesh)
+
+    from repro.shardctx import activation_sharding
+    t0 = time.time()
+    with mesh, activation_sharding(mesh):
+        jitted = jax.jit(fn, in_shardings=in_shard, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {k: int(getattr(mem, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes") if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        mem_stats = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)           # static (loop-unaware) view
+    from repro.analysis.hlo import analyze_hlo
+    ana = analyze_hlo(hlo)                 # loop-scaled dot FLOPs + wire bytes
+
+    result.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        # loop-aware numbers (per device) — used by §Roofline
+        "dot_flops_per_device": float(ana.dot_flops),
+        "collective_wire_per_device": {k: v for k, v in
+                                       ana.collective_wire.items()},
+        "collective_wire_total": float(ana.collective_total),
+        "collective_counts_dynamic": ana.collective_counts,
+        "while_trips": ana.while_trips,
+        # raw XLA numbers (loop bodies counted once) — kept for reference
+        "xla_flops_per_device": float(cost.get("flops", -1)),
+        "xla_bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+        "collectives_static": coll,
+        "memory_analysis": mem_stats,
+        "params_total": param_count(cfg),
+        "params_active": active_param_count(cfg),
+        "hlo_lines": len(hlo.splitlines()),
+    })
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape}__{mesh_kind}.json"
+    path.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            path = out_dir / f"{arch}__{shape}__{mesh_kind}.json"
+            if args.skip_existing and path.exists():
+                print(f"[dryrun] {arch} × {shape} × {mesh_kind}: cached")
+                continue
+            try:
+                res = run_cell(arch, shape, mesh_kind, out_dir)
+            except Exception as e:
+                failures += 1
+                print(f"[dryrun] {arch} × {shape} × {mesh_kind}: FAILED {e}")
+                continue
+            if res["status"] == "skipped":
+                print(f"[dryrun] {arch} × {shape} × {mesh_kind}: "
+                      f"SKIP ({res['reason']})")
+                path.write_text(json.dumps(res, indent=1))
+            else:
+                print(f"[dryrun] {arch} × {shape} × {mesh_kind}: OK "
+                      f"compile={res['compile_seconds']}s "
+                      f"dotflops/dev={res['dot_flops_per_device']:.3e} "
+                      f"wire={res['collective_wire_total']/1e9:.2f}GB "
+                      f"temp={res['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.1f}GB")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to materialize the placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips, axes (data, model).
+    Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — ``pod``
+    carries only data-parallel gradient reduction (DCN-friendly)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
+    """Small mesh for CI (requires >= n_data*n_model host devices)."""
+    shape = (2, n_data, n_model) if multi_pod else (n_data, n_model)
+    axes = (("pod",) if multi_pod else ()) + ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+# v5e hardware constants used by the roofline analysis (benchmarks/roofline).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,9 @@
+"""Model zoo: one generic JAX LM covering the 10 assigned architectures."""
+
+from .common import ModelConfig, active_param_count, param_count
+from .lm import (abstract_params, cache_spec, decode_step, init_cache,
+                 init_params, loss_fn, model_shapes, prefill)
+
+__all__ = ["ModelConfig", "param_count", "active_param_count",
+           "abstract_params", "cache_spec", "decode_step", "init_cache",
+           "init_params", "loss_fn", "model_shapes", "prefill"]

@@ -1,0 +1,401 @@
+"""Layer primitives: norms, rotary embeddings (incl. M-RoPE), attention
+(GQA / sliding-window / softcap / qk-norm), gated MLP, chunked losses.
+
+Everything is pure-jnp + lax (pjit/GSPMD-friendly); the Pallas flash kernel
+in :mod:`repro.kernels` is an optional TPU fast path validated against the
+same math.  Attention uses an online-softmax **blockwise** formulation
+(lax.scan over KV blocks) so train/prefill memory is O(S·block), not O(S²)
+— this is the memory-roofline-relevant choice on TPU (VMEM-sized tiles) and
+keeps the dry-run HLO compact.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.shardctx import constrain
+
+from .common import ModelConfig
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple | None = None) -> jax.Array:
+    """Rotate ``x`` (..., S, H, Dh) by position-dependent angles.
+
+    ``positions``: (B, S) int32 for standard RoPE, or (3, B, S) for M-RoPE
+    (qwen2-vl): the head-dim frequency bands are partitioned into
+    (temporal, height, width) sections, each rotated by its own position
+    stream [arXiv:2409.12191].
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    if mrope_sections is not None:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        sec = jnp.asarray(
+            sum(([i] * s for i, s in enumerate(mrope_sections)), []))
+        pos = positions[sec, :, :]                       # (dh/2, B, S)
+        angles = jnp.einsum("dbs,d->bsd", pos.astype(jnp.float32), freqs)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]                 # (B,S,1,dh/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (online softmax over KV blocks) with a custom VJP.
+#
+# A naive lax.scan online-softmax saves every per-block carry for reverse-
+# mode AD — O(S²/block) residual memory, defeating the point.  The custom
+# VJP saves only (q, k, v, out, lse) and recomputes probabilities blockwise
+# in the backward pass (FlashAttention-2 schedule [arXiv:2307.08691]),
+# giving O(S·block) memory in both directions.  This pure-jnp version is
+# also the oracle for the Pallas TPU kernel (repro.kernels.flash_attention).
+
+
+NO_WINDOW = 1 << 30        # sliding window that never masks (traced-friendly)
+
+
+def _fa_mask(q_pos, kv_pos, causal, window, kv_limit):
+    """``window`` is an int32 scalar (possibly traced: gemma2's per-layer
+    local/global schedule flows through scan xs); NO_WINDOW disables it."""
+    mask = kv_pos[None, :] < kv_limit
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    mask &= kv_pos[None, :] > q_pos[:, None] - window
+    return mask                                        # (Tq, blk)
+
+
+def _fa_blocks(k, v, kv_block):
+    B, Tk, KV, Dh = k.shape
+    nblocks = -(-Tk // kv_block)
+    pad = nblocks * kv_block - Tk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    kb = jnp.moveaxis(kp.reshape(B, nblocks, kv_block, KV, Dh), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nblocks, kv_block, KV, Dh), 1, 0)
+    return kb, vb, nblocks
+
+
+def _fa_mask_stack(Tq, Tk, nblocks, kv_block, causal, window):
+    """(nblocks, Tq, kv_block) additive bias stack, computed once and fed
+    to the scans as xs: computing masks inside the loop body lets XLA
+    loop-hoist them into a (B, heads, …) broadcast stack (observed 3.2 GB
+    on the granite-moe cell); as xs they stay this compact shape."""
+    q_pos = jnp.arange(Tq)
+    kv_pos = (jnp.arange(nblocks)[:, None] * kv_block
+              + jnp.arange(kv_block)[None, :])              # (nb, blk)
+    mask = kv_pos[:, None, :] < Tk
+    if causal:
+        mask &= kv_pos[:, None, :] <= q_pos[None, :, None]
+    mask &= kv_pos[:, None, :] > q_pos[None, :, None] - window
+    return mask
+
+
+def _fa_forward(q, k, v, window, causal, scale, cap, kv_block):
+    """Returns (out (B,T,KV,G,Dh) fp32, lse (B,T,KV,G))."""
+    B, Tq, KV, G, Dh = q.shape
+    Tk = k.shape[1]
+    qf = q.astype(jnp.float32) * scale
+    kb, vb, nblocks = _fa_blocks(k, v, kv_block)
+    masks = _fa_mask_stack(Tq, Tk, nblocks, kv_block, causal, window)
+
+    def body(carry, blk):
+        acc, m, s = carry
+        kblk, vblk, mask = blk
+        logits = jnp.einsum("btkgd,bukd->btkgu", qf, kblk.astype(jnp.float32))
+        logits = softcap(logits, cap)
+        logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        scale_old = jnp.exp(m - m_new)
+        s_new = s * scale_old + p.sum(axis=-1)
+        pv = jnp.einsum("btkgu,bukd->btkgd", p, vblk.astype(jnp.float32))
+        return (acc * scale_old[..., None] + pv, m_new, s_new), None
+
+    acc0 = jnp.zeros((B, Tq, KV, G, Dh), jnp.float32)
+    m0 = jnp.full((B, Tq, KV, G), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((B, Tq, KV, G), jnp.float32)
+    (acc, m, s), _ = lax.scan(body, (acc0, m0, s0), (kb, vb, masks))
+    s = jnp.maximum(s, 1e-30)
+    return acc / s[..., None], m + jnp.log(s)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, window, causal, scale, cap, kv_block):
+    out, _ = _fa_forward(q, k, v, window, causal, scale, cap, kv_block)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, window, causal, scale, cap, kv_block):
+    out, lse = _fa_forward(q, k, v, window, causal, scale, cap, kv_block)
+    return out.astype(q.dtype), (q, k, v, window, out, lse)
+
+
+def _flash_bwd(causal, scale, cap, kv_block, res, dout):
+    q, k, v, window, out, lse = res
+    return _flash_bwd_impl(q, k, v, window, out, lse, dout, causal, scale,
+                           cap, kv_block)
+
+
+def _flash_bwd_impl(q, k, v, window, out, lse, dout, causal, scale, cap,
+                    kv_block):
+    B, Tq, KV, G, Dh = q.shape
+    Tk = k.shape[1]
+    qf = q.astype(jnp.float32) * scale
+    do = dout.astype(jnp.float32)
+    delta = jnp.sum(do * out, axis=-1)          # (B,T,KV,G)
+    kb, vb, nblocks = _fa_blocks(k, v, kv_block)
+    masks = _fa_mask_stack(Tq, Tk, nblocks, kv_block, causal, window)
+
+    def body(dq_acc, blk):
+        kblk, vblk, mask = blk
+        raw = jnp.einsum("btkgd,bukd->btkgu", qf, kblk.astype(jnp.float32))
+        capped = softcap(raw, cap)
+        capped = jnp.where(mask[None, :, None, None, :], capped, NEG_INF)
+        p = jnp.exp(capped - lse[..., None])                  # (B,T,KV,G,u)
+        dv_blk = jnp.einsum("btkgu,btkgd->bukd", p, do)
+        dp = jnp.einsum("btkgd,bukd->btkgu", do, vblk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if cap is not None:                                   # d softcap
+            t = capped / cap
+            ds = ds * (1.0 - t * t)
+        ds = jnp.where(mask[None, :, None, None, :], ds, 0.0)
+        dq_blk = jnp.einsum("btkgu,bukd->btkgd", ds, kblk.astype(jnp.float32))
+        dk_blk = jnp.einsum("btkgu,btkgd->bukd", ds, qf)
+        return dq_acc + dq_blk, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Tq, KV, G, Dh), jnp.float32)
+    dq, (dk_b, dv_b) = lax.scan(body, dq0, (kb, vb, masks))
+    dk = jnp.moveaxis(dk_b, 0, 1).reshape(B, nblocks * kv_block, KV, Dh)[:, :Tk]
+    dv = jnp.moveaxis(dv_b, 0, 1).reshape(B, nblocks * kv_block, KV, Dh)[:, :Tk]
+    dwin = np.zeros((), jax.dtypes.float0)      # int arg: zero cotangent
+    return ((dq * scale).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), dwin)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _direct_attention(q, k, v, *, causal, q_offset, window, scale, cap,
+                      kv_len_mask):
+    """Small-Tq (decode) path: one full masked einsum — O(Tq·Tk) transient,
+    trivially GSPMD-shardable over the KV sequence (flash-decoding style:
+    the softmax reduction over a sharded Tk becomes an all-reduce)."""
+    B, Tq, KV, G, Dh = q.shape
+    Tk = k.shape[1]
+    qf = q.astype(jnp.float32) * scale
+    logits = jnp.einsum("btkgd,bukd->btkgu", qf, k.astype(jnp.float32))
+    logits = softcap(logits, cap)
+    q_pos = q_offset + jnp.arange(Tq)
+    kv_pos = jnp.arange(Tk)
+    limit = Tk if kv_len_mask is None else kv_len_mask
+    mask = _fa_mask(q_pos, kv_pos, causal, window, limit)
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("btkgu,bukd->btkgd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(axis=-1)[..., None], 1e-30)
+    return out
+
+
+def attention(q, k, v, *, causal=True, q_offset=0, window=None,
+              logit_scale=None, cap=None, kv_block=512, kv_len_mask=None):
+    """Attention over (B,Tq,H,Dh) queries and (B,Tk,KV,Dh) keys/values.
+
+    Tq > 8 → flash (custom-VJP, blockwise, static offsets only);
+    Tq ≤ 8 → direct masked einsum (decode; supports traced q_offset /
+    kv_len_mask against statically-shaped caches).
+    ``window`` may be None, a python int, or a traced int32 scalar.
+    """
+    B, Tq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if logit_scale is None:
+        logit_scale = 1.0 / math.sqrt(Dh)
+    win = jnp.asarray(NO_WINDOW if window is None else window, jnp.int32)
+    qg = q.reshape(B, Tq, KV, G, Dh)
+    if Tq > 8:
+        assert isinstance(q_offset, int) and q_offset == 0 and kv_len_mask is None, \
+            "flash path expects full-sequence train/prefill"
+        out = _flash(qg, k, v, win, causal, logit_scale, cap,
+                     min(kv_block, k.shape[1]))
+    else:
+        out = _direct_attention(qg, k, v, causal=causal, q_offset=q_offset,
+                                window=win, scale=logit_scale, cap=cap,
+                                kv_len_mask=kv_len_mask)
+    return out.reshape(B, Tq, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + cache plumbing)
+
+
+def attn_params_shape(cfg: ModelConfig) -> dict:
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    shapes = {
+        "wq": (D, H, Dh), "wk": (D, KV, Dh), "wv": (D, KV, Dh),
+        "wo": (H, Dh, D),
+    }
+    if cfg.qk_norm:
+        shapes["q_norm"] = (Dh,)
+        shapes["k_norm"] = (Dh,)
+    return shapes
+
+
+def expand_kv_heads(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA → per-query-head K/V (B,T,KV,Dh) → (B,T,H,Dh).
+
+    Attention then runs with one head axis sharded cleanly over ``model``;
+    keeping the (KV, G) grouped form wedges TP when KV doesn't divide the
+    model axis (e.g. 8 kv-heads on 16-way TP — observed as mass resharding
+    on the qwen3 cells)."""
+    KV = k.shape[2]
+    if KV == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // KV, axis=2)
+
+
+def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, positions,
+               causal=True, window=None, cache=None, cross_kv=None):
+    """Attention sublayer.  ``cache`` = (k, v, length) with statically-shaped
+    k/v (B, S_max, KV, Dh) for decode; ``cross_kv`` = (k, v) precomputed
+    encoder keys/values for enc-dec cross attention."""
+    B, T, D = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    q = constrain(q, "batch", None, "model", None)
+    if cross_kv is None:
+        k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(x.dtype))
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    new_cache = None
+    kv_len_mask = None
+    q_offset = 0
+    if cross_kv is None:
+        if positions is not None:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        if cache is not None:
+            ck, cv, clen = cache
+            ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), clen, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), clen, axis=1)
+            new_cache = (ck, cv, clen + T)
+            k, v = ck, cv
+            kv_len_mask = clen + T
+            q_offset = clen
+    k = expand_kv_heads(k, cfg.n_heads)
+    v = expand_kv_heads(v, cfg.n_heads)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    out = attention(q, k, v, causal=causal and cross_kv is None,
+                    q_offset=q_offset, window=window,
+                    cap=cfg.attn_softcap, kv_len_mask=kv_len_mask)
+    out = constrain(out, "batch", None, "model", None)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    # §Perf iteration 2: seq-sharded output → GSPMD reduce-scatters the TP
+    # partial sums over `model` instead of all-reducing (half the wire);
+    # dims that don't divide (decode T=1) fall back to replicated.
+    seq_ax = "model" if cfg.seq_shard_activations else None
+    return constrain(out, "batch", seq_ax, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+
+
+def mlp_params_shape(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {"w_in": (D, F), "w_gate": (D, F), "w_out": (F, D)}
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = jax.nn.silu if cfg.mlp_act == "silu" else partial(jax.nn.gelu, approximate=True)
+    h = jnp.einsum("btd,df->btf", x, p["w_in"].astype(x.dtype))
+    g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+    h = constrain(h, "batch", None, "model")
+    g = constrain(g, "batch", None, "model")
+    h = h * act(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("btf,fd->btd", h, p["w_out"].astype(x.dtype))
+    seq_ax = "model" if cfg.seq_shard_activations else None   # §Perf iter 2
+    return constrain(out, "batch", seq_ax, None)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+
+
+def chunked_softmax_xent(hidden: jax.Array, w_unembed: jax.Array,
+                         labels: jax.Array, cfg: ModelConfig,
+                         final_softcap: float | None = None) -> jax.Array:
+    """Sequence-chunked cross entropy: never materializes (B, S, V) logits —
+    scans S in ``cfg.loss_chunk`` slices (memory-roofline choice for the
+    256k-vocab archs).  Returns mean NLL over all tokens."""
+    B, S, D = hidden.shape
+    chunk = min(cfg.loss_chunk, S)
+    n = -(-S // chunk)
+    w_unembed = w_unembed.astype(hidden.dtype)   # cast once, not per chunk
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)    # (n,B,chunk,D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    # checkpoint the chunk body: without it the scan saves every chunk's
+    # (B, chunk, V) logits in f32 for the backward — the whole point of
+    # chunking is to never materialize (B, S, V).
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, xs):
+        h, l = xs
+        logits = jnp.einsum("btd,vd->btv", h, w_unembed.astype(h.dtype))
+        logits = constrain(logits, "batch", None, "model")
+        logits = softcap(logits.astype(jnp.float32), final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        valid = l >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = lax.scan(body, (jnp.float32(0), jnp.int32(0)), (hc, lc))
+    return total / jnp.maximum(count, 1)

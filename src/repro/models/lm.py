@@ -1,0 +1,576 @@
+"""Language-model assembly for all assigned architecture families.
+
+One generic stack covers: dense decoder-only (stablelm/granite/qwen3),
+local-global alternating + softcaps (gemma2), MoE (mixtral/granite-moe),
+attention-free SSD (mamba2), SSM+shared-attention hybrid (zamba2),
+M-RoPE VLM backbone (qwen2-vl), and encoder-decoder (seamless).
+
+Layers are parameter-stacked and applied with ``jax.lax.scan`` (compact
+HLO — essential for 80-cell AOT dry-runs — and the natural shape for
+per-layer remat and FSDP weight all-gather).  Three entry points:
+
+* :func:`loss_fn`        — training forward + chunked xent loss
+* :func:`prefill`        — forward returning last-token logits + KV caches
+* :func:`decode_step`    — one-token serve step against static-shape caches
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig
+from repro.shardctx import constrain
+
+from .layers import (apply_rope, attention, attn_apply, attn_params_shape,
+                     chunked_softmax_xent, expand_kv_heads, mlp_apply,
+                     mlp_params_shape, rms_norm, softcap)
+from .moe import moe_apply, moe_params_shape
+from .ssm import ssm_apply, ssm_cache_init, ssm_params_shape
+
+# A window value that never masks anything (global-attention layers inside
+# a uniformly-scanned local/global stack).
+NO_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# Parameter shape trees / init
+
+
+def block_shapes(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        return {"ln": (D,), "ssm": ssm_params_shape(cfg)}
+    shapes = {"ln1": (D,), "attn": attn_params_shape(cfg), "ln2": (D,)}
+    if cfg.n_experts:
+        shapes["moe"] = moe_params_shape(cfg)
+    else:
+        shapes["mlp"] = mlp_params_shape(cfg)
+    return shapes
+
+
+def enc_block_shapes(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    return {"ln1": (D,), "attn": attn_params_shape(cfg), "ln2": (D,),
+            "mlp": mlp_params_shape(cfg)}
+
+
+def dec_block_shapes(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    return {"ln1": (D,), "attn": attn_params_shape(cfg),
+            "ln_x": (D,), "cross": attn_params_shape(cfg),
+            "ln2": (D,), "mlp": mlp_params_shape(cfg)}
+
+
+def shared_block_shapes(cfg: ModelConfig) -> dict:
+    """zamba2's shared transformer block (attention + MLP, one param set
+    reused at every application point)."""
+    D = cfg.d_model
+    return {"ln1": (D,), "attn": attn_params_shape(cfg), "ln2": (D,),
+            "mlp": mlp_params_shape(cfg)}
+
+
+def model_shapes(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    shapes: dict = {"embed": (V, D), "final_norm": (D,)}
+    if not cfg.tie_embeddings:
+        shapes["unembed"] = (V, D)
+    if cfg.is_enc_dec:
+        shapes["encoder"] = {"layers": enc_block_shapes(cfg),
+                             "final_norm": (D,)}
+        shapes["layers"] = dec_block_shapes(cfg)
+    else:
+        shapes["layers"] = block_shapes(cfg)
+    if cfg.family == "hybrid":
+        shapes["shared"] = shared_block_shapes(cfg)
+    return shapes
+
+
+def _init_leaf(key, name: str, shape: tuple, cfg: ModelConfig) -> jax.Array:
+    if name in ("ln", "ln1", "ln2", "ln_x", "final_norm", "out_norm",
+                "q_norm", "k_norm"):
+        return jnp.zeros(shape, jnp.float32)          # rms scale ≡ 1 + 0
+    if name == "A_log":
+        H = shape[0]
+        return jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32))
+    if name == "dt_bias":
+        dt = jnp.exp(jnp.linspace(math.log(1e-3), math.log(1e-1), shape[0]))
+        return jnp.log(jnp.expm1(dt)).astype(jnp.float32)
+    if name == "D_skip":
+        return jnp.ones(shape, jnp.float32)
+    if name in ("conv_b",):
+        return jnp.zeros(shape, jnp.float32)
+    fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+    if name == "wo" or name == "w_out" or name == "out_proj":
+        # scaled for residual depth
+        scale = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    elif name == "embed" or name == "unembed":
+        scale = 0.02
+    else:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def _init_tree(key, tree, cfg: ModelConfig, stack: int | None = None):
+    out = {}
+    names = sorted(tree)
+    keys = jax.random.split(key, len(names))
+    for k, name in zip(keys, names):
+        node = tree[name]
+        if isinstance(node, dict):
+            out[name] = _init_tree(k, node, cfg, stack)
+        else:
+            if stack is None:
+                out[name] = _init_leaf(k, name, node, cfg)
+            else:
+                ks = jax.random.split(k, stack)
+                out[name] = jnp.stack([
+                    _init_leaf(ks[i], name, node, cfg) for i in range(stack)])
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    shapes = model_shapes(cfg)
+    k_embed, k_layers, k_enc, k_shared, k_un = jax.random.split(key, 5)
+    params = {
+        "embed": _init_leaf(k_embed, "embed", shapes["embed"], cfg),
+        "final_norm": jnp.zeros(shapes["final_norm"], jnp.float32),
+        "layers": _init_tree(k_layers, shapes["layers"], cfg,
+                             stack=cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init_leaf(k_un, "unembed", shapes["unembed"], cfg)
+    if cfg.is_enc_dec:
+        params["encoder"] = {
+            "layers": _init_tree(k_enc, shapes["encoder"]["layers"], cfg,
+                                 stack=cfg.n_enc_layers),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        params["shared"] = _init_tree(k_shared, shapes["shared"], cfg)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct tree (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer window schedule (gemma2 alternating / mixtral all-SWA)
+
+
+def window_schedule(cfg: ModelConfig) -> jnp.ndarray | None:
+    if cfg.swa_pattern == "none" or cfg.sliding_window is None:
+        return None
+    if cfg.swa_pattern == "all":
+        return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    # alternating: even layers local, odd layers global (gemma2)
+    w = jnp.where(jnp.arange(cfg.n_layers) % 2 == 0,
+                  cfg.sliding_window, NO_WINDOW)
+    return w.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only forward (train / prefill)
+
+
+def _block_apply(lp, x, cfg: ModelConfig, positions, window, cache=None):
+    """One transformer block (attention or ssm variant).  Returns
+    (x, new_cache, aux)."""
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_cache = ssm_apply(lp["ssm"], rms_norm(x, lp["ln"], cfg.norm_eps),
+                                 cfg, cache=cache)
+        return x + h, new_cache, 0.0
+    h, new_cache = attn_apply(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                              cfg, positions=positions, causal=True,
+                              window=window, cache=cache)
+    x = x + h
+    hid = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        h2, aux = moe_apply(lp["moe"], hid, cfg)
+    else:
+        h2, aux = mlp_apply(lp["mlp"], hid, cfg), 0.0
+    return x + h2, new_cache, aux
+
+
+def _shared_attn_apply(sp, x, cfg: ModelConfig, positions, cache=None):
+    """zamba2 shared block: full attention + MLP with shared weights."""
+    h, new_cache = attn_apply(sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps),
+                              cfg, positions=positions, causal=True,
+                              window=None, cache=cache)
+    x = x + h
+    x = x + mlp_apply(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps), cfg)
+    return x, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward_hidden(params: dict, x: jax.Array, cfg: ModelConfig,
+                   positions) -> tuple[jax.Array, jax.Array]:
+    """Embed-less trunk: x (B,T,D) → (hidden (B,T,D), aux_loss)."""
+    windows = window_schedule(cfg)
+    n_layers = cfg.n_layers
+
+    if cfg.family == "hybrid":
+        every = max(cfg.shared_attn_every, 1)
+        apply_attn = (jnp.arange(n_layers) % every == 0).astype(jnp.int32)
+        shared = params["shared"]
+
+        def body(carry, xs):
+            h = carry
+            lp, use_attn = xs
+            h = constrain(h, "batch", None, None)
+            h = lax.cond(
+                use_attn > 0,
+                lambda hh: _shared_attn_apply(shared, hh, cfg, positions)[0],
+                lambda hh: hh, h)
+            h, _, _ = _block_apply(lp, h, cfg, positions, None)
+            return constrain(h, "batch", None, None), 0.0
+
+        body = _maybe_remat(body, cfg)
+        x, _ = lax.scan(body, x, (params["layers"], apply_attn))
+        return x, jnp.float32(0.0)
+
+    seq_ax = "model" if cfg.seq_shard_activations else None
+
+    def body(carry, xs):
+        h, aux = carry
+        if windows is not None:
+            lp, w = xs
+        else:
+            lp, w = xs, None
+        h = constrain(h, "batch", seq_ax, None)
+        h, _, a = _block_apply(lp, h, cfg, positions, w)
+        return (constrain(h, "batch", seq_ax, None), aux + a), None
+
+    body = _maybe_remat(body, cfg)
+    xs = (params["layers"], windows) if windows is not None else params["layers"]
+    (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return x, aux
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    # §Perf iteration 3: cast the table BEFORE the gather (vocab-parallel
+    # lookup = masked gather + all-reduce of the (B,S,D) result — in bf16
+    # that collective halves) and emit the result sequence-sharded so the
+    # reduction can land as a reduce-scatter.
+    table = params["embed"].astype(cfg.dtype)
+    x = table[tokens]
+    seq_ax = "model" if cfg.seq_shard_activations else None
+    return constrain(x, "batch", seq_ax, None)
+
+
+def _input_embeds(params, batch, cfg: ModelConfig) -> jax.Array:
+    """Trunk input embeddings by input mode.
+
+    ``patches`` (vlm): text comes from the token table; the stub vision
+    frontend supplies precomputed patch embeddings for the leading
+    ``n_patches`` positions (a full (B,S,D) embedding input would be a
+    multi-TB tensor at the 72B scale — the splice keeps the input
+    contract realistic).  ``embeds`` (audio encoder): frontend supplies
+    frame embeddings directly.
+    """
+    if cfg.input_mode == "patches":
+        patches = batch["patch_embeds"].astype(cfg.dtype)
+        n_p = patches.shape[1]
+        text = embed_tokens(params, batch["tokens"][:, n_p:], cfg)
+        return constrain(jnp.concatenate([patches, text], axis=1),
+                         "batch", None, None)
+    if cfg.input_mode == "embeds":
+        return constrain(batch["embeds"].astype(cfg.dtype), "batch", None, None)
+    return embed_tokens(params, batch["tokens"], cfg)
+
+
+def encode(params, enc_embeds, cfg: ModelConfig):
+    """Encoder trunk (seamless): bidirectional attention over frontend
+    embeddings (stub modality frontend, DESIGN.md §6)."""
+    x = enc_embeds.astype(cfg.dtype)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    seq_ax = "model" if cfg.seq_shard_activations else None
+
+    def body(h, lp):
+        h = constrain(h, "batch", seq_ax, None)
+        a, _ = attn_apply(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                          cfg, positions=positions, causal=False)
+        h = h + a
+        h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return constrain(h, "batch", seq_ax, None), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = lax.scan(body, x, params["encoder"]["layers"])
+    x = constrain(x, "batch", None, None)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def decode_trunk(params, x, enc_out, cfg: ModelConfig, positions):
+    """Decoder trunk with cross-attention (enc-dec path)."""
+    B, S_enc, D = enc_out.shape
+
+    seq_ax = "model" if cfg.seq_shard_activations else None
+
+    def body(h, lp):
+        h = constrain(h, "batch", seq_ax, None)
+        a, _ = attn_apply(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                          cfg, positions=positions, causal=True)
+        h = h + a
+        ck = jnp.einsum("btd,dhk->bthk", enc_out,
+                        lp["cross"]["wk"].astype(enc_out.dtype))
+        cv = jnp.einsum("btd,dhk->bthk", enc_out,
+                        lp["cross"]["wv"].astype(enc_out.dtype))
+        c, _ = attn_apply(lp["cross"], rms_norm(h, lp["ln_x"], cfg.norm_eps),
+                          cfg, positions=None, causal=False, cross_kv=(ck, cv))
+        h = h + c
+        h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return constrain(h, "batch", seq_ax, None), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = lax.scan(body, x, params["layers"])
+    return constrain(x, "batch", None, None)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Training loss.  ``batch`` keys by family:
+    tokens+labels (LM), embeds+labels+(positions) (vlm/audio),
+    enc_embeds+tokens+labels (enc-dec)."""
+    if cfg.is_enc_dec:
+        enc_out = encode(params, batch["enc_embeds"], cfg)
+        x = embed_tokens(params, batch["tokens"], cfg)
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        hidden = decode_trunk(params, x, enc_out, cfg, positions)
+        aux = 0.0
+    else:
+        x = _input_embeds(params, batch, cfg)
+        B, S = x.shape[:2]
+        if cfg.mrope_sections is not None:
+            positions = batch["positions"]          # (3, B, S)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        hidden, aux = forward_hidden(params, x, cfg, positions)
+
+    hidden = constrain(hidden, "batch", None, None)   # un-shard seq for the
+    hidden = rms_norm(hidden, params["final_norm"], cfg.norm_eps)  # loss scan
+    w_un = params.get("unembed", params["embed"])
+    nll = chunked_softmax_xent(hidden, w_un, batch["labels"], cfg,
+                               final_softcap=cfg.final_softcap)
+    return nll + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with static-shape caches
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Abstract cache structure.  Full-attention archs: (L,B,S,KV,Dh) k/v.
+    all-SWA archs: rolling window buffers of length min(window, max_len).
+    SSM: per-layer states.  Hybrid: ssm states + shared-attn KV."""
+    KV, Dh, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "ssm":
+        H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        conv = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        return {
+            "ssd": jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, conv), dt),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        conv = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        n_attn = -(-L // max(cfg.shared_attn_every, 1))
+        return {
+            "ssd": jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, conv), dt),
+            "k": jax.ShapeDtypeStruct((n_attn, batch, max_len, KV, Dh), dt),
+            "v": jax.ShapeDtypeStruct((n_attn, batch, max_len, KV, Dh), dt),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    window = (min(cfg.sliding_window, max_len)
+              if cfg.swa_pattern == "all" and cfg.sliding_window else max_len)
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, window, KV, Dh), dt),
+        "v": jax.ShapeDtypeStruct((L, batch, window, KV, Dh), dt),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig, enc_out: jax.Array | None = None) -> tuple:
+    """One-token decode: tokens (B, 1) → (logits (B, V), new cache).
+
+    Static shapes throughout: caches are fixed-size ring/linear buffers
+    indexed by ``cache['len']``.
+    """
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    clen = cache["len"]
+    positions = jnp.broadcast_to(clen[None, None], (B, 1)).astype(jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(clen[None, None, None], (3, B, 1)).astype(jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            h = carry
+            lp, ssd, conv = xs
+            out, new_c = ssm_apply(lp["ssm"], rms_norm(h, lp["ln"], cfg.norm_eps),
+                                   cfg, cache=(ssd, conv))
+            return h + out, new_c
+        x, (ssd_new, conv_new) = lax.scan(
+            body, x, (params["layers"], cache["ssd"], cache["conv"]))
+        new_cache = {"ssd": ssd_new, "conv": conv_new, "len": clen + 1}
+    elif cfg.family == "hybrid":
+        every = max(cfg.shared_attn_every, 1)
+        n_attn = cache["k"].shape[0]
+        apply_attn = (jnp.arange(cfg.n_layers) % every == 0).astype(jnp.int32)
+        attn_idx = jnp.cumsum(apply_attn) - 1
+        shared = params["shared"]
+
+        def body(carry, xs):
+            h, kc, vc = carry
+            lp, ssd, conv, use_attn, aidx = xs
+
+            def attn_branch(args):
+                h, kc, vc = args
+                ksl = lax.dynamic_index_in_dim(kc, aidx, 0, keepdims=False)
+                vsl = lax.dynamic_index_in_dim(vc, aidx, 0, keepdims=False)
+                out, (k2, v2, _) = _shared_attn_apply(
+                    shared, h, cfg, positions, cache=(ksl, vsl, clen))
+                kc = lax.dynamic_update_index_in_dim(kc, k2, aidx, 0)
+                vc = lax.dynamic_update_index_in_dim(vc, v2, aidx, 0)
+                return out, kc, vc
+
+            h, kc, vc = lax.cond(use_attn > 0, attn_branch,
+                                 lambda a: a, (h, kc, vc))
+            out, new_c = ssm_apply(lp["ssm"], rms_norm(h, lp["ln"], cfg.norm_eps),
+                                   cfg, cache=(ssd, conv))
+            return (h + out, kc, vc), new_c
+
+        (x, kc, vc), (ssd_new, conv_new) = lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], cache["ssd"], cache["conv"], apply_attn, attn_idx))
+        new_cache = {"ssd": ssd_new, "conv": conv_new, "k": kc, "v": vc,
+                     "len": clen + 1}
+    else:
+        windows = window_schedule(cfg)
+        S_max = cache["k"].shape[2]
+        # all-SWA caches are ring buffers of the window size (cache_spec);
+        # while clen < S_max the ring degenerates to a linear buffer.
+        rolling = cfg.swa_pattern == "all" and cfg.sliding_window is not None
+        write_at = clen % S_max if rolling else clen
+
+        def body(carry, xs):
+            h = carry
+            if windows is not None:
+                lp, kl, vl, w = xs
+            else:
+                (lp, kl, vl), w = xs, None
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            q = jnp.einsum("btd,dhk->bthk", hn, lp["attn"]["wq"].astype(hn.dtype))
+            k = jnp.einsum("btd,dhk->bthk", hn, lp["attn"]["wk"].astype(hn.dtype))
+            v = jnp.einsum("btd,dhk->bthk", hn, lp["attn"]["wv"].astype(hn.dtype))
+            if cfg.qk_norm:
+                q = rms_norm(q, lp["attn"]["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, lp["attn"]["k_norm"], cfg.norm_eps)
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+            kl = lax.dynamic_update_slice_in_dim(kl, k.astype(kl.dtype),
+                                                 write_at, axis=1)
+            vl = lax.dynamic_update_slice_in_dim(vl, v.astype(vl.dtype),
+                                                 write_at, axis=1)
+            kf = expand_kv_heads(kl, cfg.n_heads)
+            vf = expand_kv_heads(vl, cfg.n_heads)
+            if rolling:
+                # ring buffer: every live entry is within the window
+                valid = jnp.minimum(clen + 1, S_max)
+                out = attention(q, kf, vf, causal=False, cap=cfg.attn_softcap,
+                                kv_len_mask=valid)
+            else:
+                out = attention(q, kf, vf, causal=True, q_offset=clen,
+                                window=None if w is None else w,
+                                cap=cfg.attn_softcap, kv_len_mask=clen + 1)
+            out = jnp.einsum("bthk,hkd->btd", out,
+                             lp["attn"]["wo"].astype(hn.dtype))
+            h = h + out
+            hid = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                h2, _ = moe_apply(lp["moe"], hid, cfg)
+            else:
+                h2 = mlp_apply(lp["mlp"], hid, cfg)
+            return h + h2, (kl, vl)
+
+        if cfg.is_enc_dec:
+            # enc-dec decode: self-attn cache + recomputed cross K/V
+            def body_ed(carry, xs):
+                h = carry
+                lp, kl, vl = xs
+                a, (k2, v2, _) = attn_apply(
+                    lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                    positions=positions, causal=True, cache=(kl, vl, clen))
+                h = h + a
+                ck = jnp.einsum("btd,dhk->bthk", enc_out,
+                                lp["cross"]["wk"].astype(h.dtype))
+                cv = jnp.einsum("btd,dhk->bthk", enc_out,
+                                lp["cross"]["wv"].astype(h.dtype))
+                c, _ = attn_apply(lp["cross"],
+                                  rms_norm(h, lp["ln_x"], cfg.norm_eps), cfg,
+                                  positions=None, causal=False,
+                                  cross_kv=(ck, cv))
+                h = h + c
+                h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+                return h, (k2, v2)
+            x, (kc, vc) = lax.scan(body_ed, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        elif windows is not None:
+            x, (kc, vc) = lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"], windows))
+        else:
+            x, (kc, vc) = lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": kc, "v": vc, "len": clen + 1}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w_un = params.get("unembed", params["embed"])
+    logits = jnp.einsum("btd,vd->btv", x, w_un.astype(x.dtype))
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits[:, 0], new_cache
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Prefill forward: full-sequence hidden → last-token logits.  (The
+    paged-KV serving path in repro.serve builds caches; the dry-run cell
+    'prefill_32k' measures this trunk.)"""
+    if cfg.is_enc_dec:
+        enc_out = encode(params, batch["enc_embeds"], cfg)
+        x = embed_tokens(params, batch["tokens"], cfg)
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        hidden = decode_trunk(params, x, enc_out, cfg, positions)
+    else:
+        x = _input_embeds(params, batch, cfg)
+        B, S = x.shape[:2]
+        positions = (batch["positions"] if cfg.mrope_sections is not None
+                     else jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+        hidden, _ = forward_hidden(params, x, cfg, positions)
+    hidden = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    w_un = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", hidden[:, -1], w_un.astype(hidden.dtype))
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)

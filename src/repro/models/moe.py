@@ -1,0 +1,115 @@
+"""Mixture-of-Experts: top-k routing with grouped capacity dispatch.
+
+GShard-style [arXiv:2006.16668] grouped dispatch: each batch row is a
+dispatch group, so scatter/gather stay local to the data shard holding the
+row — no cross-shard indexing in the hot path.  Capacity
+``C = ceil(T·k/E · capacity_factor)`` bounds the per-expert buffer;
+overflow tokens are dropped (their combine weight is zero), matching
+standard capacity-factor training.  Expert weights are laid out
+``(E, D, F)`` and sharded FSDP×TP like dense MLPs (DESIGN.md §7).
+
+Expert-to-device *placement* for expert-parallel serving is planned by the
+Equilibrium balancer in :mod:`repro.sharding.expert_placement` — that is
+where the paper's technique becomes a first-class feature of this stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.shardctx import constrain
+
+from .common import ModelConfig
+
+
+def moe_params_shape(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": (D, E),
+        "w_in": (E, D, F), "w_gate": (E, D, F), "w_out": (E, F, D),
+    }
+
+
+def route_topk(logits: jax.Array, k: int):
+    """Top-k routing with softmax over the selected logits (Mixtral
+    [arXiv:2401.04088]).  Returns (gates (..., k), indices (..., k))."""
+    vals, idx = lax.top_k(logits, k)
+    gates = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return gates, idx
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, T, D) → (y, aux_loss).  Per-group (=batch-row) dispatch."""
+    B, T, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(-(-T * k // E) * cfg.capacity_factor))
+    C = min(C, T * k)
+
+    logits = jnp.einsum("btd,de->bte", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    gates, idx = route_topk(logits, k)                    # (B,T,k)
+
+    # Switch aux loss [arXiv:2101.03961]: E · Σ_e f_e · P_e
+    probs = jax.nn.softmax(logits, axis=-1)               # (B,T,E)
+    assign1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    f = assign1.mean(axis=(0, 1))
+    P = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f * P) * cfg.router_aux_coef
+
+    # position of each (token, rank) within its expert queue, per group.
+    # Sort-based ranking instead of a (B, T·k, E) one-hot cumsum — the
+    # cumsum materializes 40× the token count for granite-moe (observed
+    # 21 GB/device); the argsort form stays O(B·T·k).
+    e_flat_ids = idx.reshape(B, T * k)
+    order = jnp.argsort(e_flat_ids, axis=1, stable=True)   # group by expert
+    sorted_e = jnp.take_along_axis(e_flat_ids, order, axis=1)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    pos_sorted = jnp.arange(T * k)[None, :] - jnp.take_along_axis(
+        first, sorted_e, axis=1)
+    pos = jnp.zeros((B, T * k), jnp.int32)
+    pos = pos.at[jnp.arange(B)[:, None], order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C
+    gates_flat = gates.reshape(B, T * k) * keep
+
+    # scatter tokens into (B, E, C, D) buffers (local per group)
+    e_flat = e_flat_ids
+    slot = jnp.where(keep, e_flat * C + pos, E * C)        # E*C = trash row
+    tok = jnp.repeat(jnp.arange(T), k)[None, :].repeat(B, axis=0)
+    xt = jnp.take_along_axis(x, tok[..., None], axis=1)    # (B,T*k,D)
+    buf = jnp.zeros((B, E * C + 1, D), x.dtype)
+    buf = buf.at[jnp.arange(B)[:, None], slot].add(xt * keep[..., None].astype(x.dtype))
+    buf = buf[:, : E * C].reshape(B, E, C, D)
+    buf = constrain(buf, "batch", None, None, None)
+
+    # per-expert gated MLP
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    h = constrain(h, "batch", None, None, "model")
+    g = constrain(g, "batch", None, None, "model")
+    h = h * act(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("becf,efd->becd", h, p["w_out"].astype(x.dtype))
+    out = constrain(out, "batch", None, None, None)
+
+    # combine: gather each (token, rank)'s expert output, weight, sum ranks.
+    # gathered rows are already (token, rank)-ordered (tok = repeat(arange)),
+    # so the combine is a reshape+sum — scatter-free (a batch-indexed
+    # scatter-add here defeats GSPMD batch sharding: observed as a global-
+    # batch f32 buffer on the granite-moe cell).
+    out_flat = out.reshape(B, E * C, D)
+    gathered = jnp.take_along_axis(
+        out_flat, jnp.minimum(slot, E * C - 1)[..., None], axis=1)  # (B,T*k,D)
+    gathered = gathered * gates_flat[..., None].astype(x.dtype)
+    y = gathered.reshape(B, T, k, D).sum(axis=2)
+    seq_ax = "model" if cfg.seq_shard_activations else None   # §Perf iter 2
+    return constrain(y, "batch", seq_ax, None), aux
+
+
+def moe_expert_load(logits: jax.Array, k: int, n_experts: int) -> jax.Array:
+    """Tokens routed per expert (the 'shard size' signal consumed by the
+    Equilibrium expert-placement planner)."""
+    _, idx = lax.top_k(logits, k)
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.int32)
+    return onehot.sum(axis=tuple(range(onehot.ndim - 1)))

@@ -1,0 +1,210 @@
+"""Mamba-2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm as a ``lax.scan`` over sequence
+chunks: within a chunk the quadratic (dual) form runs on the MXU; across
+chunks a (B, H, P, N) state is carried — O(S·Q) memory instead of O(S²),
+and a single compact HLO loop for the dry-run.  The Pallas kernel in
+:mod:`repro.kernels.ssd_scan` is the TPU-tiled version of the same math
+(same oracle in its ref.py).
+
+Decode is the O(1) recurrent form: one state update per token — this is
+what makes the SSM/hybrid archs eligible for the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from jax import lax
+
+from repro.shardctx import constrain
+
+from .common import ModelConfig
+from .layers import rms_norm
+
+
+def ssm_params_shape(cfg: ModelConfig) -> dict:
+    """Projections are separate params (z / xBC / dt) rather than one fused
+    in_proj: TP shards each on its own output dim with no mid-tensor split
+    crossing shard boundaries (DESIGN.md §7)."""
+    D, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * G * N
+    return {
+        "in_z": (D, di),
+        "in_xbc": (D, conv_dim),
+        "in_dt": (D, H),
+        "conv_w": (cfg.ssm_conv, conv_dim),
+        "conv_b": (conv_dim,),
+        "dt_bias": (H,),
+        "A_log": (H,),
+        "D_skip": (H,),
+        "out_norm": (di,),
+        "out_proj": (di, D),
+    }
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: jax.Array | None = None):
+    """Depthwise causal conv1d; xBC (B,T,C), w (K,C).  Returns (out, new
+    conv state = last K-1 inputs)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)              # (B,T+K-1,C)
+    out = sum(xp[:, i: i + xBC.shape[1]] * w[i][None, None, :]
+              for i in range(K))
+    out = out + b[None, None, :]
+    new_state = xp[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, superchunk: int = 4):
+    """Chunked SSD scan with two-level checkpointing.
+
+    x  (B,T,H,P)   inputs per head
+    dt (B,T,H)     softplus'd step sizes
+    A  (H,)        negative decay rates
+    Bm/Cm (B,T,G,N) input/output projections (G groups broadcast onto heads)
+
+    Returns y (B,T,H,P) and final state (B,H,P,N).
+
+    A flat scan over chunks saves every (B,H,P,N) inter-chunk state for the
+    backward pass — for mamba2-2.7b that is 32 × 2.6 GB per layer (observed
+    79 GB/device).  We scan over *superchunks* of ``superchunk`` chunks and
+    jax.checkpoint the superchunk body: only superchunk-boundary states are
+    saved; within-span states are recomputed during backward (one extra
+    state pass — the cheap half of SSD).
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nchunks = T // chunk
+    assert nchunks * chunk == T, "sequence must be chunk-aligned"
+    sc = max(1, min(superchunk, nchunks))
+    while nchunks % sc:
+        sc -= 1
+    nsuper = nchunks // sc
+
+    def blkshape(a, feat):
+        # (B, T, *feat) -> (nsuper, sc, B, chunk, *feat): outer scan strips
+        # nsuper, inner scan strips sc, leaving (B, chunk, *feat) bodies.
+        # Keep the input dtype — the f32 upcast and the G→H head expansion
+        # happen per chunk inside the body (a whole-sequence f32 expanded
+        # copy of B/C is an O(H/G ×) memory blow-up: 80× for mamba2).
+        a = a.reshape(Bsz, nsuper, sc, chunk, *feat)
+        return jnp.transpose(a, (1, 2, 0, 3) + tuple(range(4, a.ndim)))
+
+    xc = blkshape(x, (H, P))
+    dtc = blkshape(dt, (H,))
+    Bc = blkshape(Bm, (G, N))
+    Cc = blkshape(Cm, (G, N))
+
+    def chunk_body(state, blk):
+        xb, dtb, Bb, Cb = blk                 # (B,Q,H,P),(B,Q,H),(B,Q,G,N)x2
+        xb = xb.astype(jnp.float32)
+        dtb = dtb.astype(jnp.float32)
+        Bb = jnp.repeat(Bb.astype(jnp.float32), rep, axis=2)   # (B,Q,H,N)
+        Cb = jnp.repeat(Cb.astype(jnp.float32), rep, axis=2)
+        dtA = dtb * A[None, None, :]          # (B,Q,H) negative
+        acum = jnp.cumsum(dtA, axis=1)        # inclusive
+        # intra-chunk (dual quadratic form)
+        Lmat = acum[:, :, None, :] - acum[:, None, :, :]      # (B,Q,Q,H) t,u
+        tri = jnp.tril(jnp.ones((xb.shape[1], xb.shape[1]), bool))
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(Lmat), 0.0)
+        scores = jnp.einsum("bthn,buhn->btuh", Cb, Bb) * Lmat
+        scores = scores * dtb[:, None, :, :]                  # weight by dt_u
+        y_intra = jnp.einsum("btuh,buhp->bthp", scores, xb)
+        # contribution of carried state
+        y_inter = jnp.einsum("bthn,bhpn->bthp", Cb, state) \
+            * jnp.exp(acum)[..., None]
+        # state update
+        total = acum[:, -1:, :]                                # (B,1,H)
+        decay_tail = jnp.exp(total - acum)                     # (B,Q,H)
+        contrib = jnp.einsum("buhn,buhp->bhpn",
+                             Bb * (dtb * decay_tail)[..., None], xb)
+        state = state * jnp.exp(total[:, 0, :, None, None]) + contrib
+        return state, y_intra + y_inter
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def super_body(state, blks):
+        return lax.scan(chunk_body, state, blks)
+
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    state, yc = lax.scan(super_body, state0, (xc, dtc, Bc, Cc))
+    # yc: (nsuper, sc, B, chunk, H, P) -> (B, T, H, P)
+    y = jnp.transpose(yc, (2, 0, 1, 3, 4, 5)).reshape(Bsz, T, H, P)
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One-token recurrence: state (B,H,P,N), x (B,H,P), dt (B,H),
+    Bm/Cm (B,G,N) → (y (B,H,P), new state)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dtA = (dt * A[None, :]).astype(jnp.float32)
+    decay = jnp.exp(dtA)[:, :, None, None]
+    contrib = jnp.einsum("bhn,bhp->bhpn", Bh * dt[..., None], x.astype(jnp.float32))
+    state = state * decay + contrib
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    return y.astype(x.dtype), state
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg: ModelConfig, cache=None):
+    """Mamba-2 block: in_proj → conv → SSD → gated norm → out_proj.
+
+    ``cache`` = (ssd_state (B,H,P,N), conv_state (B,K-1,convdim)) for
+    decode (T small, recurrent path); None for train/prefill (chunked)."""
+    B, T, D = x.shape
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    di = cfg.d_inner
+
+    z = jnp.einsum("btd,dk->btk", x, p["in_z"].astype(x.dtype))
+    xBC = jnp.einsum("btd,dk->btk", x, p["in_xbc"].astype(x.dtype))
+    dt = jnp.einsum("btd,dh->bth", x, p["in_dt"].astype(x.dtype))
+    z = constrain(z, "batch", None, "model")
+    xBC = constrain(xBC, "batch", None, "model")
+    dt = constrain(dt, "batch", None, None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    conv_state = cache[1] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, T, H, P)
+    Bm = Bm.reshape(B, T, G, N)
+    Cm = Cm.reshape(B, T, G, N)
+
+    if cache is None:
+        y, state = ssd_chunked(xs, dt, A, Bm, Cm, min(cfg.ssm_chunk, T),
+                               superchunk=cfg.ssm_super)
+    else:
+        assert T == 1, "decode path is single-token"
+        y1, state = ssd_decode_step(cache[0], xs[:, 0], dt[:, 0], A,
+                                    Bm[:, 0], Cm[:, 0])
+        y = y1[:, None]
+
+    y = y + xs * p["D_skip"].astype(jnp.float32)[None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, T, di)
+    y = constrain(y, "batch", None, "model")
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, p["out_proj"].astype(x.dtype))
+    out = constrain(out, "batch", None, None)
+    new_cache = (state, new_conv) if cache is not None else None
+    return out, new_cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return (jnp.zeros((batch, H, P, N), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype))

@@ -1,0 +1,6 @@
+"""Serving substrate: decode engine + Equilibrium-balanced paged KV pool."""
+
+from .paged_kv import PagedKVPool, PagedKVSpec
+from .engine import ServeEngine, Request
+
+__all__ = ["PagedKVPool", "PagedKVSpec", "ServeEngine", "Request"]

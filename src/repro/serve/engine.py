@@ -1,0 +1,111 @@
+"""Batched serving engine (CPU-runnable reference implementation).
+
+Continuous-batching decode loop over the model zoo's ``decode_step`` with
+admission control + Equilibrium page balancing from
+:class:`repro.serve.paged_kv.PagedKVPool`.  On a real fleet the decode
+step is the pjit'd ``serve_step`` the dry-run lowers; here the engine runs
+the same code single-host so the examples and tests exercise the full
+request lifecycle (admit → prefill → decode → finish → release)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache
+from repro.models.common import ModelConfig
+from .paged_kv import PagedKVPool, PagedKVSpec
+
+
+@dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                 # (prompt_len,)
+    max_new_tokens: int
+    generated: list[int] = field(default_factory=list)
+    seq_id: int | None = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ServeEngine:
+    """Greedy-decoding engine with a fixed decode batch of slots."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
+                 max_len: int = 256, pool: PagedKVPool | None = None,
+                 rebalance_every: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.queue: list[Request] = []
+        self.pool = pool or PagedKVPool(PagedKVSpec(n_chips=batch_slots))
+        self.rebalance_every = rebalance_every
+        self.steps = 0
+        self.migrated_bytes = 0.0
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(p, c, t, cfg))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue[0]
+            sid = self.pool.admit(len(req.prompt) + req.max_new_tokens)
+            if sid is None:
+                break                              # pool full: min-gated
+            self.queue.pop(0)
+            req.seq_id = sid
+            self.active[slot] = req
+            # prefill the prompt through single-token decode steps (simple
+            # reference path; the pjit prefill handles batt production)
+            for tok in req.prompt:
+                token_batch = np.zeros((self.slots, 1), np.int32)
+                token_batch[slot, 0] = tok
+                _, self.cache = self._decode(self.params, self.cache,
+                                             jnp.asarray(token_batch))
+
+    def step(self) -> dict:
+        """One decode step for every active slot."""
+        self._admit()
+        if not self.active:
+            return {"active": 0, "queued": len(self.queue)}
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, req in self.active.items():
+            last = req.generated[-1] if req.generated else int(req.prompt[-1])
+            tokens[slot, 0] = last
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens))
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.generated.append(int(next_tokens[slot]))
+            self.pool.extend(req.seq_id, 1)
+            if req.done:
+                finished.append(req)
+                self.pool.release(req.seq_id)
+                del self.active[slot]
+        self.steps += 1
+        if self.steps % self.rebalance_every == 0:
+            plan = self.pool.rebalance()
+            self.migrated_bytes += self.pool.migration_bytes(plan)
+        return {"active": len(self.active), "queued": len(self.queue),
+                "finished": [r.id for r in finished]}
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            info = self.step()
+            if not self.active and not self.queue:
+                break
+        return done

@@ -1,0 +1,68 @@
+"""Activation-sharding context (top-level module: models import it without
+triggering the repro.sharding package, avoiding a circular import).
+
+GSPMD propagates shardings from inputs, but FSDP (weights sharded on
+``data`` over their contraction dim) and data parallelism (batch sharded
+on ``data``) pull the propagation fixpoint in opposite directions — left
+alone, XLA picked batch-replicated activations for our stack (16× compute
+blow-up, observed on the qwen3 train cell).  Production frameworks pin
+activations with ``with_sharding_constraint`` at block boundaries; model
+code cannot depend on a mesh being present (CPU smoke tests run without
+one), so constraints go through this context: a no-op unless a driver
+installed a mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh | None):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def batch_axes() -> tuple:
+    mesh = current_mesh()
+    if mesh is None:
+        return ("data",)
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def constrain(x, *dims):
+    """Pin ``x`` to a PartitionSpec built from logical dim entries:
+    "batch" → (pod, data); "model" → model; None → replicated.
+    Axes that don't divide the dim are dropped (mirrors specs.py)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = batch_axes()
+    spec = []
+    for d, dim in zip(x.shape, dims):
+        if dim == "batch":
+            n = 1
+            for a in baxes:
+                n *= axis_sizes.get(a, 1)
+            spec.append(baxes if d % n == 0 else None)
+        elif dim == "model":
+            spec.append("model" if d % axis_sizes.get("model", 1) == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

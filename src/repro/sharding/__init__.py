@@ -1,0 +1,11 @@
+"""Distribution: mesh axes, FSDP×TP partition specs, expert placement."""
+
+from .specs import (batch_axes, batch_specs, cache_specs, opt_state_specs,
+                    param_specs, to_named_shardings)
+
+__all__ = ["batch_axes", "batch_specs", "cache_specs", "opt_state_specs",
+           "param_specs", "to_named_shardings"]
+
+from repro.shardctx import activation_sharding, constrain, current_mesh
+
+__all__ += ["activation_sharding", "constrain", "current_mesh"]

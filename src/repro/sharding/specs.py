@@ -1,0 +1,191 @@
+"""Partition specs: FSDP over ``data`` × tensor-parallel over ``model``.
+
+Layout rules (DESIGN.md §7):
+
+* every matmul weight is sharded on BOTH its large dims — the contraction-
+  side dim over ``data`` (FSDP: GSPMD all-gathers it per layer inside the
+  scan, reduce-scatters grads) and the output/head/expert-ff dim over
+  ``model`` (Megatron TP);
+* embeddings/unembeddings: vocab over ``model``, d_model over ``data``;
+* norms/scalars replicated;
+* activations: batch over (``pod``, ``data``); d_model replicated;
+  head/ff dims over ``model`` (steered by the weight shardings);
+* decode caches: batch over ``data`` when batch ≥ shards, else sequence
+  over (``pod``, ``data``); kv-heads over ``model``.
+
+Specs are *logical* until paired with a mesh: ``pod`` entries are dropped
+automatically when the mesh has no pod axis, and any axis whose size does
+not divide the dim is dropped (documented fallback, e.g. kv=8 heads on a
+16-way model axis shard 8-way... GSPMD would pad; we prefer exactness).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.lm import model_shapes
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# -- parameter specs ---------------------------------------------------------
+
+_LEAF_RULES = {
+    # name -> tuple of logical mesh axes per dim (None = replicated dim)
+    "embed": ("model", "data"),
+    "unembed": ("model", "data"),
+    "final_norm": (None,),
+    "ln": (None,), "ln1": (None,), "ln2": (None,), "ln_x": (None,),
+    "q_norm": (None,), "k_norm": (None,),
+    "wq": ("data", "model", None),
+    "wk": ("data", "model", None),
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),
+    "w_in": ("data", "model"), "w_gate": ("data", "model"),
+    "w_out": ("model", "data"),
+    "router": ("data", None),
+    # ssm
+    "in_z": ("data", "model"), "in_xbc": ("data", "model"),
+    "in_dt": ("data", None),
+    "conv_w": (None, "model"), "conv_b": ("model",),
+    "dt_bias": (None,), "A_log": (None,), "D_skip": (None,),
+    "out_norm": ("model",),
+    "out_proj": ("model", "data"),
+}
+
+# MoE weights carry a leading expert dim (replicated; expert-parallel
+# placement is the shard_map/Equilibrium path in expert_placement.py).
+_MOE_LEAVES = {"w_in", "w_gate", "w_out"}
+
+
+def _leaf_spec(name: str, shape: tuple, mesh: Mesh, stacked: bool,
+               moe: bool) -> P:
+    """``shape`` is the per-layer shape from model_shapes; the actual param
+    carries an extra leading layer-stack dim when ``stacked``."""
+    rule = _LEAF_RULES[name]
+    dims = list(rule)
+    if moe and name in _MOE_LEAVES:
+        dims = [None] + dims                      # expert dim replicated
+    assert len(dims) == len(shape), (name, shape, dims)
+    out = [None] if stacked else []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for d, ax in zip(shape, dims):
+        if ax is None or ax not in axis_sizes or d % axis_sizes[ax] != 0:
+            out.append(None)                      # exactness fallback
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def _walk(tree: dict, mesh: Mesh, cfg: ModelConfig, stacked: bool) -> dict:
+    out = {}
+    for name, node in tree.items():
+        if isinstance(node, dict):
+            out[name] = _walk(node, mesh, cfg, stacked)
+        else:
+            out[name] = _leaf_spec(name, node, mesh, stacked,
+                                   moe=bool(cfg.n_experts))
+    return out
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """PartitionSpec tree matching init_params/model_shapes exactly."""
+    shapes = model_shapes(cfg)
+    specs: dict = {
+        "embed": _leaf_spec("embed", shapes["embed"], mesh, False, False),
+        "final_norm": P(None),
+        "layers": _walk(shapes["layers"], mesh, cfg, stacked=True),
+    }
+    if "unembed" in shapes:
+        specs["unembed"] = _leaf_spec("unembed", shapes["unembed"], mesh,
+                                      False, False)
+    if cfg.is_enc_dec:
+        specs["encoder"] = {
+            "layers": _walk(shapes["encoder"]["layers"], mesh, cfg, True),
+            "final_norm": P(None),
+        }
+    if cfg.family == "hybrid":
+        specs["shared"] = _walk(shapes["shared"], mesh, cfg, stacked=False)
+    return specs
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """AdamW state mirrors param sharding (mu, nu same tree)."""
+    ps = param_specs(cfg, mesh)
+    return {"mu": ps, "nu": ps, "count": P()}
+
+
+# -- batch / cache specs -----------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_tree: dict) -> dict:
+    """Shard every batch input over (pod, data) on its batch dim."""
+    baxes = batch_axes(mesh)
+    out = {}
+    for name, leaf in batch_tree.items():
+        ndim = len(leaf.shape)
+        if name == "positions":                   # (3, B, S)
+            out[name] = P(None, baxes, *([None] * (ndim - 2)))
+        else:                                     # (B, ...)
+            out[name] = P(baxes, *([None] * (ndim - 1)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_tree: dict,
+                batch: int) -> dict:
+    """Decode-cache sharding: batch over (pod,data) when divisible, else
+    sequence over (pod,data); kv-heads/ssm-heads over model."""
+    baxes = batch_axes(mesh)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([axis_sizes[a] for a in baxes]))
+    shard_batch = batch % dp == 0
+    mp = axis_sizes.get("model", 1)
+
+    def spec_for(name: str, leaf) -> P:
+        shp = leaf.shape
+        if name == "len":
+            return P()
+        if name in ("k", "v"):                    # (L,B,S,KV,Dh)
+            # kv-heads over model when divisible; otherwise shard the KV
+            # sequence over model (flash-decoding: GSPMD turns the softmax
+            # reduction into an all-reduce over the model axis).
+            heads_divide = shp[3] % mp == 0
+            head_ax = "model" if heads_divide else None
+            if shard_batch:
+                s_ax = None if heads_divide else "model"
+                return P(None, baxes, s_ax, head_ax, None)
+            s_axes = baxes if heads_divide else (*baxes, "model")
+            return P(None, None, s_axes, head_ax, None)
+        if name == "ssd":                          # (L,B,H,P,N)
+            head_ax = "model" if shp[2] % mp == 0 else None
+            b_ax = baxes if shard_batch else None
+            return P(None, b_ax, head_ax, None, None)
+        if name == "conv":                         # (L,B,K-1,C)
+            c_ax = "model" if shp[3] % mp == 0 else None
+            b_ax = baxes if shard_batch else None
+            return P(None, b_ax, None, c_ax)
+        raise KeyError(name)
+
+    return {name: spec_for(name, leaf) for name, leaf in cache_tree.items()}
+
+
+def to_named_shardings(tree, mesh: Mesh):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def compute_param_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """ZeRO-1 compute view: TP ("model") sharding only — the bf16 compute
+    copy is gathered over ``data`` once per step; masters/optimizer stay
+    FSDP-sharded.  (§Perf iteration 5.)"""
+    def drop_data(spec):
+        return P(*[None if ax == "data" else ax for ax in spec])
+    return jax.tree.map(drop_data, param_specs(cfg, mesh),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,80 @@
+"""Gradient compression with error feedback.
+
+Large-scale cross-pod data parallelism is DCN-bandwidth bound; compressing
+gradients before the pod-level all-reduce trades a little optimizer noise
+for a large collective-byte reduction.  Two standard schemes:
+
+* ``int8`` — per-tensor symmetric quantization (scale = max|g|/127):
+  4× fewer bytes on the wire, unbiased-ish, error feedback optional.
+* ``topk`` — keep the largest-magnitude fraction per tensor, with error
+  feedback [Seide et al. 2014; Stich et al. 2018]: the residual of what
+  was not sent is added back before the next compression, preserving
+  convergence.
+
+``compress_decompress`` is the in-graph transform (quantize→dequantize so
+the update math is exactly what arrives after the wire round-trip);
+``EFState`` carries the residuals across steps when error feedback is on.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _int8_roundtrip(g: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g: jax.Array, frac: float = 0.05) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(g.shape)
+
+
+def compress_decompress(grads: Any, method: str = "int8",
+                        topk_frac: float = 0.05) -> Any:
+    """Simulate the wire round-trip in-graph (what the optimizer sees)."""
+    if method == "int8":
+        return jax.tree.map(lambda g: _int8_roundtrip(g.astype(jnp.float32)), grads)
+    if method == "topk":
+        return jax.tree.map(
+            lambda g: _topk_roundtrip(g.astype(jnp.float32), topk_frac), grads)
+    raise ValueError(f"unknown compression method {method!r}")
+
+
+@dataclass
+class EFState:
+    residual: Any
+
+    @staticmethod
+    def init(params: Any) -> "EFState":
+        return EFState(jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def compress_with_error_feedback(grads: Any, ef: EFState,
+                                 method: str = "topk",
+                                 topk_frac: float = 0.05):
+    """g' = C(g + e);  e' = (g + e) − g'.  Returns (g', new EFState)."""
+    carried = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                           grads, ef.residual)
+    sent = compress_decompress(carried, method, topk_frac)
+    new_resid = jax.tree.map(lambda c, s: c - s, carried, sent)
+    return sent, EFState(new_resid)
+
+
+def compressed_bytes_ratio(method: str, topk_frac: float = 0.05) -> float:
+    """Wire-byte ratio vs fp32 (for the §Roofline collective-term model)."""
+    if method == "int8":
+        return 0.25
+    if method == "topk":
+        return topk_frac * 2.0       # value + index per kept entry
+    return 1.0

@@ -1,0 +1,115 @@
+"""Training step: mixed-precision forward/backward + AdamW update.
+
+Master params live in fp32 (sharded FSDP×TP); the forward casts weights to
+the compute dtype at use (every layer does ``.astype(x.dtype)``), so the
+backward produces fp32 grads w.r.t. fp32 masters through bf16 compute —
+standard mixed-precision training.  Optional gradient compression
+(:mod:`repro.train.compression`) hooks between backward and update.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.lm import init_params, loss_fn
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1          # grad accumulation inside the step
+    compression: str = "none"      # none | int8 | topk (see compression.py)
+    zero1_compute_params: bool = False   # §Perf iter 5: TP-only bf16 weights
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array) -> dict:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig | None = None
+                    ) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)``, ready for
+    jax.jit with sharded in/out."""
+    tcfg = tcfg or TrainConfig()
+
+    def compute_grads(params, batch):
+        # §Perf iteration 1: cast matrices to the compute dtype ONCE per
+        # step, before the microbatch loop — FSDP weight all-gathers then
+        # move bf16, not fp32 masters (2× wire), and the cast is hoisted
+        # out of the grad-accumulation scan.
+        compute_params = jax.tree.map(
+            lambda p: p.astype(cfg.dtype) if p.ndim >= 2 else p, params)
+        if tcfg.zero1_compute_params:
+            # gather the bf16 weights over `data` once per step: contraction
+            # dims stop being data-sharded, so layer backward passes emit no
+            # f32 partial-sum all-reduces over data (ZeRO-1 semantics).
+            from repro.shardctx import current_mesh
+            mesh = current_mesh()
+            if mesh is not None:
+                from jax.sharding import NamedSharding
+                from repro.sharding.specs import compute_param_specs
+                specs = compute_param_specs(cfg, mesh)
+                compute_params = jax.tree.map(
+                    lambda x, sp: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, sp)),
+                    compute_params, specs,
+                    is_leaf=lambda x: not isinstance(x, dict))
+
+        def loss_of(cp, mb):
+            return loss_fn(cp, mb, cfg)
+
+        M = tcfg.microbatches
+        if M <= 1:
+            return jax.value_and_grad(loss_of)(compute_params, batch)
+
+        # reshape (B, ...) -> (M, B/M, ...) and scan: SPMD-friendly grad
+        # accumulation (batch stays sharded on its own dim; no dynamic
+        # slicing of a sharded axis).  Positions (3, B, S) reshape on dim 1.
+        def split(name, x):
+            if name == "positions":
+                return x.reshape(x.shape[0], M, x.shape[1] // M,
+                                 *x.shape[2:]).swapaxes(0, 1)
+            return x.reshape(M, x.shape[0] // M, *x.shape[1:])
+
+        mbs = {k: split(k, v) for k, v in batch.items()}
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            l, g = jax.value_and_grad(loss_of)(compute_params, mb)
+            return (loss_acc + l,
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 grad_acc, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), mbs)
+        inv = 1.0 / M
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: dict, batch: dict):
+        loss, grads = compute_grads(state["params"], batch)
+        if tcfg.compression != "none":
+            from .compression import compress_decompress
+            grads = compress_decompress(grads, method=tcfg.compression)
+        new_params, new_opt, metrics = adamw_update(
+            tcfg.optimizer, grads, state["opt"], state["params"])
+        metrics["loss"] = loss
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def abstract_train_state(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct train state for AOT lowering (no allocation)."""
+    return jax.eval_shape(partial(init_train_state, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))

@@ -1,0 +1,196 @@
+"""Behavioural + property tests for both balancers (the paper's §3.1/§4
+claims, on cluster scales small enough for CI)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Device, EquilibriumConfig, MgrBalancerConfig,
+                        PlacementRule, Pool, TiB, build_cluster,
+                        equilibrium_balance, mgr_balance, simulate,
+                        small_test_cluster)
+from repro.core.clustergen import cluster_a
+
+
+# ---------------------------------------------------------------------------
+# Equilibrium invariants
+
+
+def test_equilibrium_moves_are_legal_and_converge():
+    initial = small_test_cluster()
+    state = initial.copy()
+    moves, recs = equilibrium_balance(state, EquilibriumConfig(),
+                                      record_trajectory=True)
+    assert moves, "balancer should find at least one move on a skewed cluster"
+    state.check_valid()
+    # replay on a fresh copy checking per-move legality + variance descent
+    replay = initial.copy()
+    prev_var = replay.utilization_variance()
+    for mv in moves:
+        assert replay.move_is_legal(mv.pg, mv.slot, mv.dst_osd), \
+            "emitted movement violates placement constraints at apply time"
+        replay.apply(mv)
+        var = replay.utilization_variance()
+        assert var < prev_var + 1e-15, "variance must strictly decrease"
+        prev_var = var
+    replay.check_valid()
+
+
+def test_equilibrium_improves_free_space_and_variance():
+    initial = small_test_cluster()
+    state = initial.copy()
+    moves, _ = equilibrium_balance(state, EquilibriumConfig())
+    res = simulate(initial, moves, record_trajectory=False)
+    assert res.gained_free_space > 0
+    assert res.variance_after < res.variance_before
+
+
+def test_equilibrium_deterministic():
+    a_moves, _ = equilibrium_balance(small_test_cluster(), EquilibriumConfig())
+    b_moves, _ = equilibrium_balance(small_test_cluster(), EquilibriumConfig())
+    assert [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in a_moves] == \
+           [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in b_moves]
+
+
+def test_equilibrium_source_selection_is_fullest_first():
+    """The first emitted move must evacuate (one of) the fullest devices —
+    §3.1 source selection."""
+    initial = small_test_cluster()
+    util = initial.utilization()
+    state = initial.copy()
+    moves, _ = equilibrium_balance(state, EquilibriumConfig(max_moves=1))
+    assert moves
+    src_util = initial.utilization(moves[0].src_osd)
+    # the source is within the k fullest (here: strictly the fullest that
+    # admits a legal move; allow ties at float precision)
+    k_threshold = np.sort(util)[-EquilibriumConfig().k:].min()
+    assert src_util >= k_threshold - 1e-12
+
+
+def test_equilibrium_respects_max_moves():
+    state = small_test_cluster()
+    moves, _ = equilibrium_balance(state, EquilibriumConfig(max_moves=5))
+    assert len(moves) <= 5
+
+
+def test_equilibrium_k1_no_worse_than_k25_terminates():
+    """k=1: only the single fullest source is tried; must terminate and
+    produce a legal plan (§3.1 termination)."""
+    state = small_test_cluster()
+    moves, _ = equilibrium_balance(state, EquilibriumConfig(k=1))
+    state.check_valid()
+
+
+# ---------------------------------------------------------------------------
+# mgr baseline behaviour (§2.3.1)
+
+
+def test_mgr_balances_counts():
+    initial = small_test_cluster()
+    state = initial.copy()
+    moves, _ = mgr_balance(state, MgrBalancerConfig(deviation=1.0))
+    state.check_valid()
+    for pid, pool in state.pools.items():
+        ideal = state.ideal_shard_count(pool)
+        counts = state.pool_counts[pid]
+        eligible = ideal > 0
+        # balanced pools end within deviation+1 unless the pool aborted;
+        # every pool in the toy cluster is movable, so check the bound.
+        assert (counts[eligible] - ideal[eligible]).max() <= 2.0
+
+
+def test_mgr_is_size_blind_equilibrium_is_not():
+    """On a count-balanced but size-skewed cluster, mgr finds nothing while
+    Equilibrium still improves — the paper's central differentiator."""
+    # two hosts of heterogeneous capacity, one pool whose counts are equal
+    devs = []
+    for h in range(6):
+        cap = 4 * TiB if h % 2 == 0 else 12 * TiB
+        for j in range(2):
+            devs.append(Device(id=len(devs), capacity=cap, device_class="hdd",
+                               host=f"host{h}"))
+    pool = Pool(0, "p", 64, PlacementRule.replicated(3, "host"),
+                stored_bytes=20 * TiB)
+    initial = build_cluster(devs, [pool], seed=7)
+
+    mgr_state = initial.copy()
+    mgr_moves, _ = mgr_balance(mgr_state)
+    eq_state = initial.copy()
+    eq_moves, _ = equilibrium_balance(eq_state, EquilibriumConfig())
+
+    res_eq = simulate(initial, eq_moves, record_trajectory=False)
+    res_mgr = simulate(initial, mgr_moves, record_trajectory=False)
+    assert res_eq.variance_after < res_mgr.variance_after
+    assert res_eq.gained_free_space >= res_mgr.gained_free_space
+
+
+def test_paper_cluster_a_qualitative_claims():
+    """Table 1 row A, qualitatively: Equilibrium gains more space than the
+    default balancer at comparable movement volume; variance ≈ 0."""
+    initial = cluster_a()
+    mgr_state = initial.copy()
+    mgr_moves, _ = mgr_balance(mgr_state)
+    eq_state = initial.copy()
+    eq_moves, _ = equilibrium_balance(eq_state, EquilibriumConfig())
+
+    res_mgr = simulate(initial, mgr_moves, record_trajectory=False)
+    res_eq = simulate(initial, eq_moves, record_trajectory=False)
+    assert res_eq.gained_free_space > res_mgr.gained_free_space
+    assert res_eq.variance_after < 1e-4
+    assert res_eq.moved_bytes < res_mgr.moved_bytes * 1.5
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random heterogeneous clusters
+
+
+@st.composite
+def random_cluster(draw):
+    n_hosts = draw(st.integers(4, 7))
+    osds_per_host = draw(st.integers(1, 2))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    devs = []
+    for h in range(n_hosts):
+        for j in range(osds_per_host):
+            cap = float(rng.choice([4, 8, 16])) * TiB
+            devs.append(Device(id=len(devs), capacity=cap, device_class="hdd",
+                               host=f"host{h}"))
+    size = draw(st.integers(2, min(3, n_hosts)))
+    pg_count = draw(st.integers(8, 40))
+    total_cap = sum(d.capacity for d in devs)
+    fill = draw(st.floats(0.2, 0.6))
+    pool = Pool(0, "p", pg_count, PlacementRule.replicated(size, "host"),
+                stored_bytes=fill * total_cap / size)
+    return build_cluster(devs, [pool], seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(initial=random_cluster())
+def test_property_equilibrium_invariants(initial):
+    state = initial.copy()
+    moves, _ = equilibrium_balance(state, EquilibriumConfig(max_moves=200))
+    # 1. all moves legal in sequence; 2. variance non-increasing;
+    # 3. final state valid; 4. no device overfilled by balancing
+    replay = initial.copy()
+    prev = replay.utilization_variance()
+    for mv in moves:
+        assert replay.move_is_legal(mv.pg, mv.slot, mv.dst_osd)
+        replay.apply(mv)
+        v = replay.utilization_variance()
+        assert v <= prev + 1e-15
+        prev = v
+    replay.check_valid()
+    assert (replay.utilization() <= np.maximum(initial.utilization().max(), 1.0) + 1e-9).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(initial=random_cluster())
+def test_property_mgr_invariants(initial):
+    state = initial.copy()
+    moves, _ = mgr_balance(state, MgrBalancerConfig(max_moves=300))
+    replay = initial.copy()
+    for mv in moves:
+        assert replay.move_is_legal(mv.pg, mv.slot, mv.dst_osd)
+        replay.apply(mv)
+    replay.check_valid()

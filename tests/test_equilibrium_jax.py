@@ -1,0 +1,98 @@
+"""The vectorized planner must produce *identical* move sequences to the
+faithful §3.1 implementation — same shards, same destinations, same order —
+on every cluster we throw at it (equivalence is the whole point: keep the
+paper's semantics, delete the planning-time limitation)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Device, EquilibriumConfig, PlacementRule, Pool, TiB,
+                        build_cluster, equilibrium_balance, small_test_cluster)
+from repro.core.clustergen import cluster_a
+from repro.core.equilibrium_jax import DenseState, balance_fast
+
+
+def as_tuples(moves):
+    return [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in moves]
+
+
+def test_dense_state_mirrors_cluster():
+    st_ = small_test_cluster()
+    dense = DenseState(st_)
+    assert np.allclose(dense.used, st_.used())
+    assert np.allclose(dense.cap, st_.capacity_vector())
+    for pid in st_.pools:
+        assert np.array_equal(dense.pool_counts[dense.pool_index[pid]],
+                              st_.pool_counts[pid])
+    # membership consistent with acting sets
+    for pg, osds in st_.acting.items():
+        row = dense.member[dense.pg_index[pg]]
+        assert set(np.flatnonzero(row)) == {st_.idx(o) for o in osds}
+
+
+@pytest.mark.parametrize("use_jax", [False, True])
+def test_fast_matches_faithful_small(use_jax):
+    faithful_state = small_test_cluster()
+    fast_state = small_test_cluster()
+    cfg = EquilibriumConfig()
+    mv_a, _ = equilibrium_balance(faithful_state, cfg)
+    mv_b, _ = balance_fast(fast_state, cfg, use_jax=use_jax)
+    assert as_tuples(mv_a) == as_tuples(mv_b)
+    assert np.isclose(faithful_state.utilization_variance(),
+                      fast_state.utilization_variance())
+
+
+def test_fast_matches_faithful_cluster_a():
+    cfg = EquilibriumConfig()
+    a, _ = equilibrium_balance(cluster_a(), cfg)
+    b, _ = balance_fast(cluster_a(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_fast_matches_faithful_with_slack_and_k():
+    cfg = EquilibriumConfig(count_slack=1.0, k=5)
+    a, _ = equilibrium_balance(small_test_cluster(), cfg)
+    b, _ = balance_fast(small_test_cluster(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+@st.composite
+def het_cluster(draw):
+    seed = draw(st.integers(0, 2**16))
+    n_hosts = draw(st.integers(4, 8))
+    rng = np.random.default_rng(seed)
+    devs = []
+    for h in range(n_hosts):
+        for _ in range(draw(st.integers(1, 2))):
+            cap = float(rng.choice([4, 8, 12])) * TiB
+            devs.append(Device(id=len(devs), capacity=cap,
+                               device_class="hdd", host=f"host{h}"))
+    total = sum(d.capacity for d in devs)
+    pools = [Pool(0, "a", draw(st.integers(8, 32)),
+                  PlacementRule.replicated(3, "host"),
+                  stored_bytes=draw(st.floats(0.1, 0.4)) * total / 3),
+             Pool(1, "b", draw(st.integers(4, 16)),
+                  PlacementRule.replicated(2, "host"),
+                  stored_bytes=draw(st.floats(0.05, 0.2)) * total / 2)]
+    return build_cluster(devs, pools, seed=seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(initial=het_cluster())
+def test_property_fast_equals_faithful(initial):
+    cfg = EquilibriumConfig(max_moves=150)
+    a, _ = equilibrium_balance(initial.copy(), cfg)
+    b, _ = balance_fast(initial.copy(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_fast_is_faster_on_cluster_a():
+    """Sanity perf check — the vectorized planner should not be slower."""
+    import time
+    cfg = EquilibriumConfig()
+    t0 = time.perf_counter(); equilibrium_balance(cluster_a(), cfg)
+    t_faithful = time.perf_counter() - t0
+    t0 = time.perf_counter(); balance_fast(cluster_a(), cfg)
+    t_fast = time.perf_counter() - t0
+    assert t_fast < t_faithful * 2.0, (t_fast, t_faithful)

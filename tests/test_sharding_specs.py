@@ -1,0 +1,101 @@
+"""Sharding-spec behaviour: structural match with the param tree,
+divisibility fallbacks, cache specs, batch specs.  Runs in a subprocess-
+free 8-device world via a dedicated XLA flag (module-scoped, isolated
+from other tests through pytest-forked-free single-module layout... the
+suite sets the flag only if jax is not yet initialized)."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, input_specs
+from repro.models.lm import abstract_params
+from repro.sharding.specs import (batch_specs, cache_specs,
+                                  compute_param_specs, param_specs)
+
+
+class FakeMesh:
+    """Just enough Mesh surface for the spec builders (axis names/sizes)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH_POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "mixtral-8x7b",
+                                  "mamba2-2.7b", "zamba2-7b",
+                                  "seamless-m4t-large-v2"])
+def test_param_specs_match_tree(arch):
+    cfg = get_config(arch)
+    params = abstract_params(cfg)
+    specs = param_specs(cfg, MESH)
+    flat_p = jax.tree.flatten_with_path(params)[0]
+    flat_s = {tuple(str(k) for k in path): s for path, s in
+              jax.tree.flatten_with_path(
+                  specs, is_leaf=lambda x: isinstance(x, P))[0]}
+    assert len(flat_p) == len(flat_s)
+    for path, leaf in flat_p:
+        key = tuple(str(k) for k in path)
+        spec = flat_s[key]
+        assert len(spec) == leaf.ndim, (key, spec, leaf.shape)
+        # every sharded dim divides exactly
+        sizes = {"data": 16, "model": 16}
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is not None:
+                assert dim % sizes[ax] == 0, (key, dim, ax)
+
+
+def test_kv_head_fallback():
+    """8 kv heads on a 16-way model axis must NOT shard on heads."""
+    cfg = get_config("granite-8b")          # kv=8
+    specs = param_specs(cfg, MESH)
+    wk = specs["layers"]["attn"]["wk"]
+    assert "model" not in tuple(wk), f"kv=8 can't shard 16 ways: {wk}"
+    # but wq (32 heads) does
+    wq = specs["layers"]["attn"]["wq"]
+    assert "model" in tuple(wq)
+
+
+def test_compute_param_specs_drop_data():
+    cfg = get_config("granite-8b")
+    full = param_specs(cfg, MESH)
+    comp = compute_param_specs(cfg, MESH)
+    flat_f = jax.tree.leaves(full, is_leaf=lambda x: isinstance(x, P))
+    flat_c = jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, P))
+    for f, c in zip(flat_f, flat_c):
+        assert "data" not in tuple(c)
+        assert [a for a in tuple(c) if a] == \
+               [a for a in tuple(f) if a and a != "data"]
+
+
+def test_cache_specs_decode_batch_sharded():
+    cfg = get_config("zamba2-7b")           # kv=32: heads divide 16
+    cache = input_specs("zamba2-7b", "decode_32k")["cache"]
+    specs = cache_specs(cfg, MESH, cache, batch=128)
+    assert tuple(specs["k"]) == (None, "data", None, "model", None)
+    assert tuple(specs["ssd"])[1] == "data"
+
+
+def test_cache_specs_seq_fallback_when_heads_dont_divide():
+    cfg = get_config("mixtral-8x7b")        # kv=8 on 16-way model
+    cache = input_specs("mixtral-8x7b", "long_500k")["cache"]
+    specs = cache_specs(cfg, MESH, cache, batch=1)
+    k = tuple(specs["k"])
+    assert k[3] is None, "heads must not shard 16-ways"
+    assert "model" in (k[2] if isinstance(k[2], tuple) else (k[2],)), \
+        "sequence takes the model axis instead"
+
+
+def test_batch_specs_pod_axis():
+    cfg = get_config("qwen2-vl-72b")
+    batch = input_specs("qwen2-vl-72b", "train_4k")
+    specs = batch_specs(cfg, MESH_POD, batch)
+    assert tuple(specs["tokens"])[0] == ("pod", "data")
+    assert tuple(specs["positions"])[0] is None           # (3, B, S)
+    assert tuple(specs["positions"])[1] == ("pod", "data")
