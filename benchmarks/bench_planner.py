@@ -1,0 +1,180 @@
+"""Planner throughput: moves/sec per engine at paper scale and 2× scale.
+
+Four engines over the same §3.1 semantics (bit-identical sequences):
+
+* ``seed-jax``  — reproduction of the seed's ``use_jax=True`` path: a
+  Python peer-occupancy rebuild per source, one jit dispatch and one
+  blocking ``bool(found)`` host sync per source per move.  Kept here (not
+  in the library) as the fixed baseline of the perf trajectory.
+* ``jax-legacy`` — the seed path after the occ_dev gather hoist
+  (``balance_fast(engine="jax-legacy")``): still per-source dispatch+sync.
+* ``numpy``     — the dense-NumPy engine.
+* ``batch``     — the device-resident chunked engine
+  (:func:`repro.core.equilibrium_batch.balance_batch`).
+
+Engines are jit-warmed on a scratch copy, then timed over the same
+``max_moves`` window from the same initial state (steady-state planning
+throughput; one-time compile excluded — it is reported separately).
+Writes ``BENCH_planner.json`` rows ``{name, us_per_call, derived,
+git_sha}`` so the perf trajectory starts with this PR.
+
+    PYTHONPATH=src python -m benchmarks.bench_planner [--quick] [--out P]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.run import git_sha
+from repro.core import EquilibriumConfig, balance_batch, balance_fast
+from repro.core.clustergen import cluster_b
+from repro.core.equilibrium_jax import DenseState, _jax_select
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Seed-path reproduction (pre-hoist _pick_jax + per-move Python loop)
+
+
+def _seed_pick_jax(dense, rows, src_idx, cfg, pad_rows=256):
+    """The seed's _pick_jax, verbatim semantics: Python per-row peer
+    rebuild, padded host arrays, one jit call + one blocking sync."""
+    n = dense.n_dev
+    R = len(rows)
+    P = pad_rows * max(1, -(-R // pad_rows))
+
+    def padded(a, fill=0):
+        out = np.full((P,) + a.shape[1:], fill, dtype=a.dtype)
+        out[:R] = a
+        return out
+
+    sizes = padded(dense.sh_size[rows].astype(np.float64), -1.0)
+    cls = padded(dense.sh_class[rows], 0)
+    member = padded(dense.member[dense.sh_pg[rows]], True)
+    peer = np.zeros((P, n), dtype=np.int16)
+    for i, r in enumerate(rows):                 # the hoisted-away loop
+        lvl = dense.levels[dense.sh_level[r]]
+        occ_row = dense.occ[lvl][dense.sh_pg[r], dense.sh_step[r]]
+        own = dense.dev_domain[lvl][src_idx]
+        peer[i] = occ_row[dense.dev_domain[lvl]]
+        peer[i] -= (dense.dev_domain[lvl] == own).astype(np.int16)
+    own_dom_eq = np.zeros(n, dtype=bool)
+    pool_rows = dense.sh_pool[rows]
+    cnt = padded(dense.pool_counts[pool_rows])
+    ideal = padded(dense.ideal[pool_rows])
+    src_cnt = padded(dense.pool_counts[pool_rows, src_idx])
+    src_ideal = padded(dense.ideal[pool_rows, src_idx])
+    i, d, found = _jax_select(
+        jnp.asarray(sizes), jnp.asarray(cls), jnp.asarray(member),
+        jnp.asarray(peer), jnp.asarray(own_dom_eq),
+        jnp.asarray(cnt), jnp.asarray(ideal),
+        jnp.asarray(src_cnt), jnp.asarray(src_ideal),
+        jnp.asarray(dense.used), jnp.asarray(dense.cap),
+        jnp.asarray(dense.util), dense.util_sum, dense.util_sumsq,
+        jnp.asarray(dense.dev_class), src_idx, cfg.count_slack,
+        cfg.headroom, cfg.min_variance_delta, n)
+    if not bool(found):                          # the per-source host sync
+        return None
+    i = int(i)
+    if i >= R:
+        return None
+    return int(rows[i]), int(d)
+
+
+def balance_seed_jax(state, cfg):
+    """The seed balance_fast(use_jax=True) outer loop."""
+    dense = DenseState(state)
+    movements = []
+    while len(movements) < cfg.max_moves:
+        src_order = np.argsort(-dense.util, kind="stable")[: cfg.k]
+        picked = None
+        for src_idx in src_order:
+            rows = dense.source_rows(int(src_idx))
+            if rows.size == 0:
+                continue
+            picked = _seed_pick_jax(dense, rows, int(src_idx), cfg)
+            if picked is not None:
+                break
+        if picked is None:
+            break
+        row, dst_idx = picked
+        mv = dense.apply_row(row, dst_idx)
+        state.apply(mv)
+        movements.append(mv)
+    return movements, []
+
+
+# ---------------------------------------------------------------------------
+
+
+ENGINES = (
+    ("seed-jax", balance_seed_jax),
+    ("jax-legacy", lambda s, c: balance_fast(s, c, engine="jax-legacy")),
+    ("numpy", lambda s, c: balance_fast(s, c, engine="numpy")),
+    ("batch", lambda s, c: balance_batch(s, c)),
+)
+
+
+def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
+    sha = git_sha()
+    rows = []
+    per_s = {}
+    sequences = {}
+    compile_s = {}
+    for label, fn in ENGINES:
+        t0 = time.perf_counter()
+        fn(initial.copy(), EquilibriumConfig(max_moves=warm))
+        compile_s[label] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        mv, _ = fn(initial.copy(), EquilibriumConfig(max_moves=cap))
+        dt = time.perf_counter() - t0
+        per_s[label] = len(mv) / max(dt, 1e-9)
+        sequences[label] = [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in mv]
+        print(f"  {tag}.{label:10s}: {len(mv)} moves, "
+              f"{1e3 * dt / max(len(mv), 1):.2f} ms/move "
+              f"({per_s[label]:.1f} moves/s)")
+    identical = all(sequences[l] == sequences["batch"] for l, _ in ENGINES)
+    for label, _ in ENGINES:
+        speedup = per_s[label] / per_s["seed-jax"]
+        rows.append({
+            "name": f"planner.{tag}.{label}",
+            "us_per_call": 1e6 / max(per_s[label], 1e-9),
+            "derived": (f"moves_per_s={per_s[label]:.1f};"
+                        f"speedup_vs_seed={speedup:.1f}x;"
+                        f"identical={identical};"
+                        f"warmup_s={compile_s[label]:.1f}"),
+            "git_sha": sha,
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="paper scale only, short window")
+    ap.add_argument("--out", default="BENCH_planner.json")
+    args = ap.parse_args()
+
+    cap = 120 if args.quick else 400
+    warm = 16 if args.quick else 32
+    scales = (1,) if args.quick else (1, 2)
+
+    rows = []
+    for scale in scales:
+        t0 = time.perf_counter()
+        initial = cluster_b(scale=scale)
+        print(f"cluster B x{scale}: {initial.n_devices} OSDs, "
+              f"{len(initial.acting)} PGs (built {time.perf_counter()-t0:.0f}s)")
+        rows += bench_cluster(initial, f"B{scale}x", cap=cap, warm=warm)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -131,28 +131,51 @@ def bench_timing(clusters=("A", "B")) -> list[tuple]:
 
 
 def bench_planner_speed() -> list[tuple]:
-    """§Perf: paper-faithful vs vectorized planner, identical outputs."""
+    """§Perf: the three engines (paper-faithful, dense-numpy, device-
+    resident batched) on identical inputs — identical outputs, orders of
+    magnitude apart in planning time.  benchmarks/bench_planner.py runs
+    the deeper paper-scale / 2×-scale throughput comparison."""
+    from repro.core import balance_batch
+
     rows = []
     results = {}
     for name, cap in (("A", 10_000), ("C", 10_000), ("B", 300)):
         initial = PAPER_CLUSTERS[name]()
         cfg = EquilibriumConfig(max_moves=cap)
-        t0 = time.perf_counter()
-        mv_f, _ = equilibrium_balance(initial.copy(), cfg)
-        t_f = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        mv_v, _ = balance_fast(initial.copy(), cfg)
-        t_v = time.perf_counter() - t0
-        identical = ([(m.pg, m.slot, m.src_osd, m.dst_osd) for m in mv_f]
-                     == [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in mv_v])
-        results[name] = {"faithful_s": t_f, "fast_s": t_v,
-                         "moves": len(mv_f), "identical": identical,
-                         "speedup": t_f / max(t_v, 1e-9)}
-        rows.append((f"planner.{name}.faithful",
-                     1e6 * t_f / max(len(mv_f), 1), f"moves={len(mv_f)}"))
-        rows.append((f"planner.{name}.fast",
-                     1e6 * t_v / max(len(mv_v), 1),
-                     f"identical={identical};speedup={t_f / max(t_v, 1e-9):.1f}x"))
+        engines = (
+            ("faithful", lambda s: equilibrium_balance(s, cfg)),
+            ("numpy", lambda s: balance_fast(s, cfg)),
+            ("batch", lambda s: balance_batch(s, cfg)),
+        )
+        timed = {}
+        moves = {}
+        for label, fn in engines:
+            if label == "batch":        # exclude one-time jit compile: a
+                                        # short run warms the same shapes
+                balance_batch(initial.copy(),
+                              EquilibriumConfig(max_moves=16,
+                                                k=cfg.k,
+                                                count_slack=cfg.count_slack,
+                                                headroom=cfg.headroom))
+            t0 = time.perf_counter()
+            mv, _ = fn(initial.copy())
+            timed[label] = time.perf_counter() - t0
+            moves[label] = [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in mv]
+        identical = moves["faithful"] == moves["numpy"] == moves["batch"]
+        n = max(len(moves["faithful"]), 1)
+        results[name] = {
+            "moves": len(moves["faithful"]), "identical": identical,
+            **{f"{label}_s": t for label, t in timed.items()},
+            "numpy_speedup": timed["faithful"] / max(timed["numpy"], 1e-9),
+            "batch_speedup": timed["faithful"] / max(timed["batch"], 1e-9),
+        }
+        rows.append((f"planner.{name}.faithful", 1e6 * timed["faithful"] / n,
+                     f"moves={len(moves['faithful'])}"))
+        for label in ("numpy", "batch"):
+            rows.append((f"planner.{name}.{label}",
+                         1e6 * timed[label] / n,
+                         f"identical={identical};speedup="
+                         f"{timed['faithful'] / max(timed[label], 1e-9):.1f}x"))
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "planner_speed.json").write_text(json.dumps(results, indent=1))
     return rows

@@ -1,20 +1,37 @@
 """Benchmark entry point — one function per paper table/figure plus the
-framework-level analyses.  Prints ``name,us_per_call,derived`` CSV rows.
+framework-level analyses.  Prints ``name,us_per_call,derived`` CSV rows;
+``--json PATH`` additionally writes the same rows (plus the git sha) as
+a JSON list — the ``BENCH_planner.json`` schema:
+``[{"name", "us_per_call", "derived", "git_sha"}, ...]``.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import subprocess
 import sys
 import traceback
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True, check=True,
+                              timeout=10).stdout.strip()
+    except Exception:
+        return "unknown"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small clusters only (A, C, F)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON (BENCH_planner.json "
+                         "schema: name, us_per_call, derived, git_sha)")
     args = ap.parse_args()
 
     from benchmarks.paper_tables import (bench_planner_speed, bench_table1,
@@ -33,16 +50,26 @@ def main() -> None:
         ("roofline", bench_roofline),
     ]
 
+    sha = git_sha()
+    json_rows = []
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites:
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.1f},{derived}")
+                json_rows.append({"name": row_name, "us_per_call": us,
+                                  "derived": derived, "git_sha": sha})
         except Exception as e:
             failures += 1
             traceback.print_exc()
             print(f"{name},-1,FAILED:{e}")
+            json_rows.append({"name": name, "us_per_call": -1,
+                              "derived": f"FAILED:{e}", "git_sha": sha})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(json_rows, f, indent=1)
+        print(f"# wrote {len(json_rows)} rows -> {args.json}", file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

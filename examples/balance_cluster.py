@@ -6,6 +6,7 @@ both balancers from the same initial state, Table-1 row + trajectory CSV.
 
 import argparse
 import csv
+import functools
 import sys
 
 from repro.core import (EquilibriumConfig, MgrBalancerConfig, PAPER_CLUSTERS,
@@ -14,6 +15,11 @@ from repro.core import (EquilibriumConfig, MgrBalancerConfig, PAPER_CLUSTERS,
 ap = argparse.ArgumentParser()
 ap.add_argument("--cluster", choices=sorted(PAPER_CLUSTERS), default="A")
 ap.add_argument("--max-moves", type=int, default=10_000)
+ap.add_argument("--engine", default="numpy",
+                choices=("numpy", "batch", "jax-legacy"),
+                help="Equilibrium engine: dense-NumPy (default), the "
+                     "device-resident batched engine, or the per-source "
+                     "legacy JAX path — all bit-identical")
 ap.add_argument("--trajectory-csv", default=None)
 args = ap.parse_args()
 
@@ -21,10 +27,11 @@ initial = PAPER_CLUSTERS[args.cluster]()
 print(f"cluster {args.cluster}: {initial.n_devices} OSDs, "
       f"{len(initial.acting)} PGs, {len(initial.pools)} pools")
 
+equilibrium = functools.partial(balance_fast, engine=args.engine)
 results = {}
 for name, fn, cfg in (
         ("default", mgr_balance, MgrBalancerConfig(max_moves=args.max_moves)),
-        ("equilibrium", balance_fast,
+        ("equilibrium", equilibrium,
          EquilibriumConfig(max_moves=args.max_moves))):
     moves, _ = fn(initial.copy(), cfg)
     res = simulate(initial, moves, trajectory_stride=max(1, len(moves) // 100))

@@ -127,21 +127,29 @@ def cluster_a(seed: int = 1):
     return _build_capped(devices, pools, seed=seed)
 
 
-def cluster_b(seed: int = 2):
+def cluster_b(seed: int = 2, scale: int = 1):
     """8731 PGs, 810×HDD 5 PiB, 185×SSD 1 PiB, 94 pools (55 user/40 meta per
-    the paper; we use 54+40 so the count sums to 94), 3 pools ~1 PiB."""
-    devices = _make_devices([(810, 5 * PiB, "hdd"), (185, 1 * PiB, "ssd")],
+    the paper; we use 54+40 so the count sums to 94), 3 pools ~1 PiB.
+
+    ``scale`` multiplies device counts, capacities, PG counts and payload
+    uniformly — ``scale=2`` is the ≥1000-OSD "2× paper-scale" cluster the
+    planner-throughput benchmarks (benchmarks/bench_planner.py) run on.
+    """
+    devices = _make_devices([(810 * scale, scale * 5 * PiB, "hdd"),
+                             (185 * scale, scale * 1 * PiB, "ssd")],
                             osds_per_host=12, seed=seed)
     ec83 = PlacementRule.erasure(8, 3, "host", "hdd")
     r3_hdd = PlacementRule.replicated(3, "host", "hdd")
     r3_ssd = PlacementRule.replicated(3, "host", "ssd")
     pools = _pool_set(
-        total_pgs=8731,
-        big=[(2048, 1.0 * PiB, ec83, 8), (2048, 0.9 * PiB, ec83, 8),
-             (1024, 0.95 * PiB, r3_hdd, 0)],
+        total_pgs=8731 * scale,
+        big=[(2048 * scale, scale * 1.0 * PiB, ec83, 8),
+             (2048 * scale, scale * 0.9 * PiB, ec83, 8),
+             (1024 * scale, scale * 0.95 * PiB, r3_hdd, 0)],
         n_small_user=51, n_meta=40,
         small_rule=r3_hdd, meta_rule=r3_ssd,
-        small_bytes=4.0 * TiB, meta_bytes=0.15 * TiB, seed=seed)
+        small_bytes=scale * 4.0 * TiB, meta_bytes=scale * 0.15 * TiB,
+        seed=seed)
     return _build_capped(devices, pools, seed=seed)
 
 

@@ -1,0 +1,518 @@
+"""Device-resident batched Equilibrium planner (engine 3 of 3).
+
+The dense-NumPy planner (:mod:`repro.core.equilibrium_jax`) already
+vectorized the per-source legality math, but its outer loop stayed on the
+host: one selection per source per move, a Python peer-occupancy rebuild,
+and — on the first-generation JAX path — one jit dispatch plus one
+blocking ``bool(found)`` device sync per source.  This module moves the
+*entire* planning loop onto the device:
+
+* **All planning state lives in device arrays**, chosen so the per-move
+  functional update never rewrites a large buffer (XLA CPU copies a
+  scatter-updated loop carry wholesale, so the dense ``(n_pg, n_dev)``
+  membership / domain-occupancy matrices of the NumPy engine are replaced
+  by their compact ground truth): the ``(n_pg, max_pool_size)`` acting
+  table, per-pool shard counts and their destination-count criterion, the
+  per-device shard row-sets as a padded ``(n_dev, row_capacity)`` table
+  in the faithful candidate order (size-descending, row-ascending), and
+  the utilization order itself (a maintained stable argsort) — each
+  updated incrementally by O(n) shift/scatter work per move.  Membership
+  and failure-domain legality are recomputed per candidate tile from the
+  acting table (≤ pool-size vectorized compares per destination), the way
+  CRUSH evaluates placements from the map rather than from materialized
+  occupancy.
+* **One jitted step batches the k fullest sources.**  Legality +
+  criteria are evaluated as a ``(source_block, row_block, n_dev)`` masked
+  tensor; a ``lax.while_loop`` walks the (source, row) frontier and stops
+  as soon as the *faithful* winner is decided: a source may only win once
+  every fuller source is resolved (found or exhausted), i.e. the loop
+  runs until ``min(found sources) < min(unresolved sources)``.  With
+  ``source_block=cfg.k`` and ``row_block ≥ max rows/device`` this is the
+  full ``(k, R_max, n_dev)`` tensor in one iteration; the defaults use a
+  small tile because the fullest source almost always yields the move —
+  same move sequence either way, property-tested across tile shapes.
+* **The inner masked-argmax/argmin reduction is a kernel** —
+  :func:`repro.kernels.ops.masked_select` (Pallas on TPU, interpret-mode
+  fallback, pure-jnp reference on CPU), returning per candidate row
+  whether any destination is legal and the emptiest legal destination.
+* **Moves apply functionally on-device.**  A ``lax.scan`` emits up to
+  ``chunk`` moves per host round-trip; each applied move updates the
+  carry with masked scatters (masked, not branched — ``lax.cond`` around
+  the carry would also defeat buffer reuse).  The host syncs **once per
+  chunk** (a single ``device_get`` of the emitted move block — O(1/chunk)
+  syncs per move, regression-tested via :func:`host_sync_count`), instead
+  of ~k times per move.
+* **ClusterState reconciles once at the end**: the emitted move list is
+  replayed through :meth:`ClusterState.apply` (which re-validates every
+  source assignment), exactly like :func:`repro.core.simulate.simulate`
+  replays movement logs.
+
+All float math runs in float64 (``jax.experimental.enable_x64``) with the
+same expressions and evaluation order as the NumPy engine, so the move
+sequences are **bit-identical** to the faithful §3.1 planner — property-
+tested across multi-pool / multi-class / hybrid-rule clusters in
+tests/test_equilibrium_batch.py.  Row tables are padded to
+``row_capacity ≥ max shards/device + chunk`` so a chunk can never
+overflow; if a destination's row list nears capacity the host re-pads and
+resumes (exercised by the padding-boundary tests).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import numpy as np
+
+from .cluster import ClusterState, Movement
+from .equilibrium import EquilibriumConfig, MoveRecord
+
+try:  # pragma: no cover - JAX is always present in this repo
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover
+    _HAVE_JAX = False
+
+
+_SYNC_COUNT = 0
+
+
+def host_sync_count() -> int:
+    """Total device→host transfers issued by this engine (test hook)."""
+    return _SYNC_COUNT
+
+
+def _fetch(tree):
+    """The only device→host transfer point in this module: one call per
+    planning chunk (plus one per re-pad), never per move or per source."""
+    global _SYNC_COUNT
+    _SYNC_COUNT += 1
+    return jax.device_get(tree)
+
+
+def _select_rows(valid2d, util, backend: str):
+    """Dispatch the masked-select reduction: per candidate row, any-legal
+    flag and emptiest legal destination (ties → lowest device index)."""
+    if backend == "ref":
+        from ..kernels.ref import masked_select_ref
+        return masked_select_ref(valid2d, util)
+    from ..kernels.ops import masked_select
+    return masked_select(valid2d, util, interpret=(backend != "pallas-tpu"))
+
+
+def _shift_remove(arr, pos, pad):
+    """Drop ``arr[pos]``, shift the tail left, pad the freed last slot."""
+    n = arr.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    out = jnp.where(idx >= pos, jnp.roll(arr, -1), arr)
+    return out.at[n - 1].set(pad)
+
+
+def _shift_insert(arr, pos, value):
+    """Insert ``value`` at ``pos``, shifting the tail right (last drops)."""
+    n = arr.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    return jnp.where(idx < pos, arr,
+                     jnp.where(idx == pos, value, jnp.roll(arr, 1)))
+
+
+# ---------------------------------------------------------------------------
+# The jitted chunk: select + apply up to `m` moves entirely on-device
+
+
+@partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend"))
+def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
+                k, kb, rb, m, backend):
+    """Run up to ``m`` planning steps on-device.
+
+    dyn   = (used, util, util_sum, util_sumsq, acting, pool_counts,
+             dst_ok, rows_on, nrows, order)         — mutated functionally
+    const = (cap, dev_class, dev_domain, sh_size, sh_pg, sh_pool,
+             sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal)
+
+    Returns (dyn', done, overflow, moves (m, 4) int32) where each move row
+    is (shard_row, src_idx, dst_idx, sources_tried) or -1 sentinels.
+    """
+    (cap, dev_class, dev_domain, sh_size, sh_pg, sh_pool,
+     sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal) = const
+    n_dev = cap.shape[0]
+    n_slots = dyn[4].shape[1]
+    r_cap = dyn[7].shape[1]
+    n_f = float(n_dev)
+    n_sb = -(-k // kb)
+    k_pad = n_sb * kb
+    dev_iota = jnp.arange(n_dev, dtype=jnp.int32)
+    cap_lim = cap * (1.0 - headroom)         # loop-invariant, hoisted
+
+    def select_one(dyn, active):
+        """One §3.1 planning step: walk (source-block, row-block) tiles of
+        the batched legality tensor until the faithful winner is decided."""
+        used, util, us, usq, acting, pool_counts, dst_ok, \
+            rows_on, nrows, order = dyn
+        src_order = order[:k]       # maintained == argsort(-util, stable)
+        if k_pad > k:   # pad to a source-block multiple; masked from wins
+            src_order = jnp.pad(src_order, (0, k_pad - k))
+        rows_k = rows_on[src_order]         # (k_pad, r_cap), faithful order
+        n_rows_k = jnp.where(jnp.arange(k_pad) < k, nrows[src_order], 0)
+        old_var = usq / n_f - (us / n_f) ** 2
+
+        def eval_tile(sb, c):
+            """(kb, rb, n_dev) legality+criteria slab for tile (sb, c)."""
+            blk = lax.dynamic_slice(rows_k, (sb * kb, c * rb), (kb, rb))
+            src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
+            r = jnp.clip(blk, 0)
+            size = jnp.where(blk >= 0, sh_size[r], 0.0)          # (kb, rb)
+            real = size > 0.0
+            pg = sh_pg[r]
+            pool = sh_pool[r]
+            lvl = sh_level[r]
+            slot = sh_slot[r]
+            sbase = sh_sbase[r]
+            scnt = sh_scnt[r]
+            # device domain ids at each row's failure-domain level
+            dom = jnp.broadcast_to(dev_domain[0][None, None, :],
+                                   (kb, rb, n_dev))
+            for l in range(1, dev_domain.shape[0]):
+                dom = jnp.where((lvl == l)[..., None], dev_domain[l], dom)
+            # membership + per-step domain separation straight from the
+            # acting table: ≤ n_slots vectorized compares per destination
+            # (padded slots are -1 and never match)
+            acting_t = acting[pg]                                # (kb, rb, S)
+            bad = jnp.zeros((kb, rb, n_dev), bool)
+            for j in range(n_slots):
+                a_j = acting_t[..., j]                           # (kb, rb)
+                in_step = (j >= sbase) & (j < sbase + scnt) & (j != slot)
+                peer_dom = dev_domain[lvl, jnp.clip(a_j, 0)]
+                bad |= a_j[..., None] == dev_iota                # member
+                bad |= in_step[..., None] & (dom == peer_dom[..., None])
+            cls = sh_class[r]
+            class_ok = ((cls[..., None] < 0)
+                        | (dev_class[None, None, :] == cls[..., None]))
+            cap_ok = used[None, None, :] + size[..., None] <= cap_lim
+            crit = dst_ok[pool]                                  # (kb, rb, n)
+            cnt_s = pool_counts[pool, src_b[:, None]]            # (kb, rb)
+            idl_s = ideal[pool, src_b[:, None]]
+            src_ok = (jnp.abs(cnt_s - 1.0 - idl_s)
+                      <= jnp.abs(cnt_s - idl_s) + slack)
+            # exact variance delta (same expressions as DenseState)
+            u_s = util[src_b][:, None, None]
+            v_s = (used[src_b][:, None] - size)[..., None] / cap[src_b][:, None, None]
+            v_d = (used[None, None, :] + size[..., None]) / cap[None, None, :]
+            dsum = (v_s - u_s) + (v_d - util[None, None, :])
+            dsq = (v_s ** 2 - u_s ** 2) + (v_d ** 2 - util[None, None, :] ** 2)
+            new_var = (usq + dsq) / n_f - ((us + dsum) / n_f) ** 2
+            var_ok = (new_var - old_var) < -min_dvar
+            not_self = dev_iota[None, None, :] != src_b[:, None, None]
+            return (class_ok & ~bad & cap_ok & crit & var_ok
+                    & (real & src_ok)[..., None] & not_self)
+
+        def body(carry):
+            (sb, c, found_row, found_dst,
+             win_j, win_row, win_dst, done) = carry
+            valid = eval_tile(sb, c)
+            anyv, dst = _select_rows(valid.reshape(kb * rb, n_dev), util,
+                                     backend)
+            anyv = anyv.reshape(kb, rb)
+            dst = dst.reshape(kb, rb)
+            first_i = jnp.argmax(anyv, axis=1)
+            has = jnp.take_along_axis(anyv, first_i[:, None], 1)[:, 0]
+            tile_dst = jnp.take_along_axis(dst, first_i[:, None], 1)[:, 0]
+            idxb = jnp.arange(kb, dtype=jnp.int32)
+            has &= sb * kb + idxb < k       # pad sources alias device 0;
+            newly = has & (found_row < 0)   # they may never win
+            found_row = jnp.where(newly, (c * rb + first_i).astype(jnp.int32),
+                                  found_row)
+            found_dst = jnp.where(newly, tile_dst.astype(jnp.int32),
+                                  found_dst)
+            # a source wins once every fuller source in its block resolved
+            # (blocks are walked in source order, so earlier blocks already
+            # resolved empty); decided/exhausted drive the frontier
+            n_rows_b = lax.dynamic_slice_in_dim(n_rows_k, sb * kb, kb)
+            found = found_row >= 0
+            unres = ~found & (n_rows_b > (c + 1) * rb)
+            min_found = jnp.min(jnp.where(found, idxb, kb))
+            min_unres = jnp.min(jnp.where(unres, idxb, kb))
+            decided = min_found < min_unres
+            exhausted = (min_found == kb) & (min_unres == kb)
+            jb = jnp.clip(min_found, 0, kb - 1)
+            win_j = jnp.where(decided, sb * kb + jb, win_j)
+            win_row = jnp.where(decided, found_row[jb], win_row)
+            win_dst = jnp.where(decided, found_dst[jb], win_dst)
+            next_sb = jnp.where(exhausted, sb + 1, sb)
+            next_c = jnp.where(exhausted, 0, c + 1)
+            done = decided | (exhausted & (sb + 1 >= n_sb))
+            reset = jnp.full((kb,), -1, jnp.int32)
+            found_row = jnp.where(exhausted, reset, found_row)
+            found_dst = jnp.where(exhausted, 0, found_dst)
+            return (next_sb, next_c, found_row, found_dst,
+                    win_j, win_row, win_dst, done)
+
+        def cond(carry):
+            return active & ~carry[-1]
+
+        init = (jnp.int32(0), jnp.int32(0), jnp.full((kb,), -1, jnp.int32),
+                jnp.zeros((kb,), jnp.int32), jnp.int32(-1), jnp.int32(-1),
+                jnp.int32(0), jnp.bool_(False))
+        out = lax.while_loop(cond, body, init)
+        win_j, win_row, win_dst = out[4], out[5], out[6]
+        found = win_j >= 0
+        jw = jnp.clip(win_j, 0, k_pad - 1)
+        return (found,
+                rows_k[jw, jnp.clip(win_row, 0, r_cap - 1)],
+                src_order[jw],
+                win_dst,
+                win_j + 1)
+
+    def reorder(order, util, src, dst):
+        """Re-sort ``src`` and ``dst`` within the maintained stable
+        argsort(-util) order after their utilizations changed.  Both are
+        removed before either is re-inserted — inserting one while the
+        other still sits at a stale rank would miscount its position by
+        one whenever the two straddle the insertion point.  Insertion
+        ranks are counted from the (-util, index) key, exactly the stable
+        sort's comparator."""
+        o = _shift_remove(order, jnp.argmax(order == src).astype(jnp.int32),
+                          jnp.int32(-1))
+        o = _shift_remove(o, jnp.argmax(o == dst).astype(jnp.int32),
+                          jnp.int32(-1))
+        u_s, u_d = util[src], util[dst]
+        before_src = ((util > u_s) | ((util == u_s) & (dev_iota < src))) \
+            & (dev_iota != dst)
+        o = _shift_insert(o, jnp.sum(before_src).astype(jnp.int32), src)
+        before_dst = (util > u_d) | ((util == u_d) & (dev_iota < dst))
+        return _shift_insert(o, jnp.sum(before_dst).astype(jnp.int32), dst)
+
+    def apply_move(dyn, ok, row, src, dst):
+        """Functional mirror of DenseState.apply_row (same update order,
+        bit-identical float accumulation).  ``ok=False`` makes every
+        update a no-op *without branching*, so XLA keeps the scan carry
+        buffers in place; no update touches more than O(n) elements."""
+        used, util, us, usq, acting, pool_counts, dst_ok, \
+            rows_on, nrows, order = dyn
+        okf = ok.astype(jnp.float64)
+        oki = ok.astype(jnp.int32)
+        row = jnp.where(ok, row, 0)
+        size = sh_size[row]
+        pgi = sh_pg[row]
+        pool = sh_pool[row]
+        slot = sh_slot[row]
+        both = jnp.stack([src, dst])
+        acting = acting.at[pgi, slot].set(jnp.where(ok, dst,
+                                                    acting[pgi, slot]))
+        pool_counts = pool_counts.at[pool, both].add(
+            jnp.stack([-okf, okf]))
+        # the destination-count criterion only changes where the counts
+        # changed: recompute those two entries
+        c2 = pool_counts[pool, both]
+        i2 = ideal[pool, both]
+        ok2 = jnp.abs(c2 + 1.0 - i2) <= jnp.abs(c2 - i2) + slack
+        dst_ok = dst_ok.at[pool, both].set(jnp.where(ok, ok2,
+                                                     dst_ok[pool, both]))
+        # sorted row lists: shift-remove from src, shift-insert into dst
+        # (keeps the (size desc, row asc) faithful candidate order)
+        src_list = rows_on[src]
+        pos_s = jnp.argmax(src_list == row).astype(jnp.int32)
+        removed = _shift_remove(src_list, pos_s, jnp.int32(-1))
+        dst_list = rows_on[dst]
+        dsz = jnp.where(dst_list >= 0, sh_size[jnp.clip(dst_list, 0)],
+                        -jnp.inf)
+        before = (dst_list >= 0) & ((dsz > size)
+                                    | ((dsz == size) & (dst_list < row)))
+        pos_d = jnp.sum(before).astype(jnp.int32)
+        inserted = _shift_insert(dst_list, pos_d, row)
+        rows_on = rows_on.at[both].set(
+            jnp.stack([jnp.where(ok, removed, src_list),
+                       jnp.where(ok, inserted, dst_list)]))
+        nrows = nrows.at[both].add(jnp.stack([-oki, oki]))
+        used = used.at[both].add(jnp.stack([-size * okf, size * okf]))
+        for i in (src, dst):                  # source first, like apply_row
+            u_new = used[i] / cap[i]          # no-op when ok=False: the
+            us = us + (u_new - util[i])       # recomputed ratio is bit-
+            usq = usq + (u_new ** 2 - util[i] ** 2)   # identical, deltas
+            util = util.at[i].set(u_new)      # are exactly 0.0
+        order = jnp.where(ok, reorder(order, util, src, dst), order)
+        return (used, util, us, usq, acting, pool_counts, dst_ok,
+                rows_on, nrows, order)
+
+    def step(carry, _):
+        dyn, done, overflow = carry
+        active = ~(done | overflow)
+        found, row, src, dst, tried = select_one(dyn, active)
+        # a full destination row-list would drop a shard: stop the chunk
+        # and let the host re-pad (never hit when row_capacity >= max
+        # rows/device + chunk, the packing invariant)
+        ovf = found & (dyn[8][dst] >= r_cap)
+        ok = active & found & ~ovf
+        dyn = apply_move(dyn, ok, row, src, dst)
+        emit = jnp.where(ok, jnp.stack([row, src, dst, tried]),
+                         jnp.full((4,), -1, jnp.int32))
+        done = done | (active & ~found)
+        overflow = overflow | ovf
+        return (dyn, done, overflow), emit
+
+    carry0 = (dyn, jnp.bool_(False), jnp.bool_(False))
+    (dyn, done, overflow), moves = lax.scan(step, carry0, None, length=m)
+    return dyn, done, overflow, moves
+
+
+# ---------------------------------------------------------------------------
+# Host driver
+
+
+def _pack_rows(rows_on_dev, sh_size: np.ndarray, r_cap: int) -> np.ndarray:
+    """Pad per-device row sets to (n_dev, r_cap), each in the faithful
+    candidate order: size descending, row (= (pg, slot)) ascending."""
+    rows = np.full((len(rows_on_dev), r_cap), -1, np.int32)
+    for d, s in enumerate(rows_on_dev):
+        order = sorted(s, key=lambda r: (-sh_size[r], r))
+        rows[d, :len(order)] = order
+    return rows
+
+
+def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
+                  record_trajectory: bool = False,
+                  record_free_space: bool = True, chunk: int = 64,
+                  source_block: int = 1, row_block: int = 8,
+                  row_capacity: int | None = None,
+                  select_backend: str = "auto"):
+    """Device-resident drop-in for :func:`repro.core.equilibrium.balance`:
+    identical move sequences, one host sync per ``chunk`` moves.
+
+    ``source_block`` × ``row_block`` is the tile of the batched
+    ``(k, R_max, n_dev)`` legality tensor evaluated per inner iteration
+    (``source_block=cfg.k`` + ``row_block >= R_max`` evaluates the whole
+    tensor at once; the defaults walk it lazily because the fullest
+    source usually yields the move).  ``row_capacity`` pads the
+    per-device row table (default: max shards/device + ``chunk``, the
+    no-overflow invariant).  ``select_backend``: "auto" (Pallas on TPU,
+    jnp reference elsewhere), "ref", "pallas" (interpret off-TPU), or
+    "pallas-tpu".
+
+    Trajectory records amortize each chunk's wall-time over its emitted
+    moves, so the first chunk's ``planning_seconds`` include the one-time
+    jit compile (and a re-pad's recompile); steady-state timing wants a
+    warmed engine — see benchmarks/bench_planner.py.
+    """
+    cfg = cfg or EquilibriumConfig()
+    if not _HAVE_JAX:  # pragma: no cover - numpy fallback, same outputs
+        from .equilibrium_jax import balance_fast
+        return balance_fast(state, cfg, record_trajectory=record_trajectory,
+                            record_free_space=record_free_space,
+                            engine="numpy")
+    from .equilibrium_jax import DenseState
+
+    if select_backend == "auto":
+        select_backend = ("pallas-tpu" if jax.default_backend() == "tpu"
+                          else "ref")
+    if not state.acting or not state.pools or state.n_devices < 2:
+        return [], []
+    dense = DenseState(state)
+    if not dense.shard_key:
+        return [], []
+    k = min(cfg.k, state.n_devices)
+    kb = min(max(1, source_block), k)
+    rb = max(1, row_block)
+
+    # compact acting table (n_pg, max pool size), padded with -1
+    n_slots = max(p.size for p in state.pools.values())
+    acting_np = np.full((len(dense.pgs), n_slots), -1, np.int32)
+    for pg, pgi in dense.pg_index.items():
+        osds = state.acting[pg]
+        acting_np[pgi, :len(osds)] = [state.idx(o) for o in osds]
+
+    with enable_x64():
+        const = (
+            jnp.asarray(dense.cap), jnp.asarray(dense.dev_class, jnp.int32),
+            jnp.asarray(dense.dev_domain_arr, jnp.int32),
+            jnp.asarray(dense.sh_size.astype(np.float64)),
+            jnp.asarray(dense.sh_pg, jnp.int32),
+            jnp.asarray(dense.sh_pool, jnp.int32),
+            jnp.asarray(dense.sh_class, jnp.int32),
+            jnp.asarray(dense.sh_level, jnp.int32),
+            jnp.asarray(dense.sh_slot, jnp.int32),
+            jnp.asarray(dense.sh_sbase, jnp.int32),
+            jnp.asarray(dense.sh_scnt, jnp.int32),
+            jnp.asarray(dense.ideal),
+        )
+        nrows_np = np.array([len(s) for s in dense.rows_on_dev], np.int32)
+        dst_ok_np = (np.abs(dense.pool_counts + 1.0 - dense.ideal)
+                     <= np.abs(dense.pool_counts - dense.ideal)
+                     + cfg.count_slack)
+        order_np = np.argsort(-dense.util, kind="stable").astype(np.int32)
+
+        def make_dyn(r_cap):
+            return (
+                jnp.asarray(dense.used), jnp.asarray(dense.util),
+                jnp.asarray(dense.util_sum, jnp.float64),
+                jnp.asarray(dense.util_sumsq, jnp.float64),
+                jnp.asarray(acting_np), jnp.asarray(dense.pool_counts),
+                jnp.asarray(dst_ok_np),
+                jnp.asarray(_pack_rows(dense.rows_on_dev, dense.sh_size,
+                                       r_cap)),
+                jnp.asarray(nrows_np), jnp.asarray(order_np),
+            )
+
+        def round_cap(n):
+            return max(rb, -(-int(n) // rb) * rb)
+
+        r_cap = round_cap(max(row_capacity, int(nrows_np.max()))
+                          if row_capacity is not None
+                          else int(nrows_np.max()) + chunk)
+        dyn = make_dyn(r_cap)
+        slack = jnp.asarray(cfg.count_slack, jnp.float64)
+        headroom = jnp.asarray(cfg.headroom, jnp.float64)
+        min_dvar = jnp.asarray(cfg.min_variance_delta, jnp.float64)
+
+        raw_moves: list[tuple[int, int, int, int]] = []
+        chunk_times: list[tuple[float, int]] = []
+        while len(raw_moves) < cfg.max_moves:
+            t0 = time.perf_counter()
+            dyn, done, overflow, moves = _plan_chunk(
+                dyn, const, slack, headroom, min_dvar,
+                k=k, kb=kb, rb=rb, m=chunk, backend=select_backend)
+            moves_np, done, overflow, nrows_np = _fetch(
+                (moves, done, overflow, dyn[8]))
+            dt = time.perf_counter() - t0
+            emitted = moves_np[moves_np[:, 0] >= 0]
+            raw_moves.extend(map(tuple, emitted.tolist()))
+            chunk_times.append((dt, len(emitted)))
+            if len(raw_moves) >= cfg.max_moves:
+                del raw_moves[cfg.max_moves:]   # device ran past the cap;
+                break                           # the replay below ignores it
+            if done:
+                break
+            if overflow or int(nrows_np.max()) + chunk > r_cap:
+                # re-pad the per-device row table and resume (one extra
+                # sync; triggers one recompile for the new row_capacity)
+                rows_np = _fetch(dyn[7])
+                r_cap = round_cap(int(nrows_np.max()) + chunk)
+                packed = np.full((state.n_devices, r_cap), -1, np.int32)
+                for d in range(state.n_devices):
+                    nd = int(nrows_np[d])
+                    packed[d, :nd] = rows_np[d, :nd]
+                dyn = dyn[:7] + (jnp.asarray(packed),) + dyn[8:]
+
+    # -- reconcile with the dict-based model once, replaying the move log --
+    movements: list[Movement] = []
+    records: list[MoveRecord] = []
+    per_move_s = iter([dt / max(n, 1)
+                       for dt, n in chunk_times for _ in range(n)])
+    for row, src, dst, tried in raw_moves:
+        pg, slot = dense.shard_key[row]
+        mv = Movement(pg, slot, state.devices[src].id, state.devices[dst].id,
+                      float(dense.sh_size[row]))
+        state.apply(mv)                      # re-validates source assignment
+        movements.append(mv)
+        if record_trajectory:
+            records.append(MoveRecord(
+                movement=mv,
+                variance_after=state.utilization_variance(),
+                free_space_after=(state.total_pool_free_space()
+                                  if record_free_space else float("nan")),
+                planning_seconds=next(per_move_s),
+                sources_tried=tried,
+            ))
+    return movements, records

@@ -1,12 +1,24 @@
-"""Vectorized Equilibrium planner (beyond-paper optimization, DESIGN.md §2).
+"""Vectorized Equilibrium planner (engine 2 of 3, DESIGN.md §2).
 
-The faithful planner (:mod:`repro.core.equilibrium`) re-scans candidates in
-Python per move: O(shards_on_source × devices) ``move_is_legal`` calls, each
-walking rule steps and domain sets — the paper reports up to 1 s/move on
-cluster B (810 HDD + 185 SSD OSDs, 8731 PGs) and argues planning time is
-amortized by transfer time.  We remove the limitation instead: one balancing
-step is reformulated as dense masked array work over a
-``(shards_on_source, devices)`` grid:
+The repo ships a three-engine architecture, all emitting *bit-identical
+move sequences* (property-tested in tests/test_equilibrium_jax.py and
+tests/test_equilibrium_batch.py):
+
+1. **faithful** (:mod:`repro.core.equilibrium`) — the paper's §3.1 loop,
+   O(shards_on_source × devices) Python ``move_is_legal`` calls per move;
+   the semantic reference.  The paper reports up to 1 s/move on cluster B
+   (810 HDD + 185 SSD OSDs, 8731 PGs) and argues planning time is
+   amortized by transfer time; the other engines remove the limitation.
+2. **dense-numpy** (this module) — one balancing step is reformulated as
+   dense masked array work over a ``(shards_on_source, devices)`` grid;
+   no warm-up cost, the small-cluster default.
+3. **device-resident batched** (:mod:`repro.core.equilibrium_batch`) —
+   the ``use_jax=True`` production path: all planning state lives in
+   device arrays, one jitted chunked scan evaluates all ``k`` fullest
+   sources at once and applies moves functionally on-device, syncing
+   with the host once per chunk instead of per source.
+
+The per-step math shared by engines 2 and 3:
 
 * legality  = class-match ∧ ¬PG-member ∧ failure-domain-free ∧ capacity-fit
 * criteria  = ideal-count (source scalar, destination vector)
@@ -14,12 +26,14 @@ step is reformulated as dense masked array work over a
 * selection = largest shard with any valid destination; emptiest valid
               destination — identical tie-breaking to the faithful planner.
 
-All incremental state (membership matrix, per-domain occupancy counts,
-per-pool shard counts) is maintained across moves, so one move costs a few
-vector ops instead of ~10⁵ Python calls.  The selection math runs either in
-NumPy or as a jitted JAX kernel over padded arrays (``use_jax=True``); both
-produce *bit-identical move sequences* to the faithful planner (property-
-tested in tests/test_equilibrium_jax.py).
+All incremental state (membership matrix, per-(pg,step) domain occupancy
+gathered per device, per-pool shard counts) is maintained across moves, so
+one move costs a few vector ops instead of ~10⁵ Python calls.
+
+``_pick_jax`` / ``engine="jax-legacy"`` preserves the first-generation JAX
+path — one jit call and one blocking host sync per source per move — as
+the measured baseline for benchmarks/bench_planner.py's throughput
+trajectory; new callers should use the batched engine.
 """
 
 from __future__ import annotations
@@ -105,11 +119,16 @@ class DenseState:
         self.sh_dev = np.array([state.idx(state.acting[pg][slot])
                                 for pg, slot in rows])
 
-        # per-shard rule-step attributes
+        # per-shard rule-step attributes (single walk of each pool rule:
+        # step index, the step's first slot and count — the slot geometry
+        # every engine shares)
         lvl_id = {l: i for i, l in enumerate(self.levels)}
         self.sh_level = np.empty(n_sh, dtype=np.int64)
         self.sh_class = np.empty(n_sh, dtype=np.int64)       # -1 = any
         self.sh_step = np.empty(n_sh, dtype=np.int64)        # step idx in pool rule
+        self.sh_slot = np.empty(n_sh, dtype=np.int64)
+        self.sh_sbase = np.empty(n_sh, dtype=np.int64)       # step's first slot
+        self.sh_scnt = np.empty(n_sh, dtype=np.int64)        # step's slot count
         for r, (pg, slot) in enumerate(rows):
             step = state.pools[pg[0]].rule.step_of_slot(slot)
             self.sh_level[r] = lvl_id[step.failure_domain]
@@ -123,10 +142,14 @@ class DenseState:
                     break
                 base += s.count
             self.sh_step[r] = si
+            self.sh_slot[r] = slot
+            self.sh_sbase[r] = base
+            self.sh_scnt[r] = s.count
 
         # membership (n_pg, n_dev) and per-(pg,step,level) domain occupancy
         self.member = np.zeros((n_pg, n_dev), dtype=bool)
         max_steps = max(len(state.pools[p].rule.steps) for p in state.pools)
+        self.max_steps = max_steps
         self.occ = {lvl: np.zeros((n_pg, max_steps, self.n_domains[lvl]),
                                   dtype=np.int16) for lvl in self.levels}
         for r, (pg, slot) in enumerate(rows):
@@ -136,6 +159,23 @@ class DenseState:
             lvl = self.levels[self.sh_level[r]]
             self.occ[lvl][pgi, self.sh_step[r],
                           self.dev_domain[lvl][di]] += 1
+
+        # Per-device domain-occupancy view: occ_dev[pg, step, d] = shards of
+        # (pg, step) already in the failure domain containing device d, at
+        # the step's own level.  One gather per candidate block replaces the
+        # per-row Python peer-occupancy rebuild; maintained incrementally in
+        # apply_row.  Each (pg, step) has exactly one failure-domain level
+        # (the rule step's), so a single dense array suffices.
+        self.dev_domain_arr = np.stack([self.dev_domain[lvl]
+                                        for lvl in self.levels])
+        self.occ_dev = np.zeros((n_pg, max_steps, n_dev), dtype=np.int16)
+        pg_pool = np.array([pg[0] for pg in pgs])
+        for p in pool_ids:
+            idx = np.flatnonzero(pg_pool == p)
+            for si, rstep in enumerate(state.pools[p].rule.steps):
+                lvl = rstep.failure_domain
+                self.occ_dev[idx, si] = \
+                    self.occ[lvl][idx, si][:, self.dev_domain[lvl]]
 
         # per-device shard rows (python lists; updated incrementally)
         self.rows_on_dev: list[set[int]] = [set() for _ in range(n_dev)]
@@ -159,8 +199,11 @@ class DenseState:
 
         self.member[pgi, src_idx] = False
         self.member[pgi, dst_idx] = True
-        self.occ[lvl][pgi, stp, self.dev_domain[lvl][src_idx]] -= 1
-        self.occ[lvl][pgi, stp, self.dev_domain[lvl][dst_idx]] += 1
+        dom = self.dev_domain[lvl]
+        self.occ[lvl][pgi, stp, dom[src_idx]] -= 1
+        self.occ[lvl][pgi, stp, dom[dst_idx]] += 1
+        self.occ_dev[pgi, stp] += ((dom == dom[dst_idx]).astype(np.int16)
+                                   - (dom == dom[src_idx]).astype(np.int16))
         self.pool_counts[self.sh_pool[row], src_idx] -= 1
         self.pool_counts[self.sh_pool[row], dst_idx] += 1
         self.rows_on_dev[src_idx].discard(row)
@@ -191,6 +234,20 @@ class DenseState:
         rows = rows[order]
         return rows[self.sh_size[rows] > 0.0]
 
+    def peer_occupancy(self, rows: np.ndarray,
+                       src_idx: int) -> tuple[np.ndarray, np.ndarray]:
+        """(R, n_dev) peer occupancy per destination with each shard's own
+        source domain already subtracted, plus the raw per-device domain
+        occupancy.  No Python per-row work — two gathers on occ_dev /
+        dev_domain_arr (levels differ per row, so both are indexed by the
+        row's own level)."""
+        occ = self.occ_dev[self.sh_pg[rows], self.sh_step[rows]]   # (R, n)
+        lvl_rows = self.sh_level[rows]
+        dom_rows = self.dev_domain_arr[lvl_rows]                   # (R, n)
+        own = self.dev_domain_arr[lvl_rows, src_idx]               # (R,)
+        peer = occ - (dom_rows == own[:, None]).astype(np.int16)
+        return peer, occ
+
     def valid_matrix(self, rows: np.ndarray, src_idx: int,
                      cfg: EquilibriumConfig) -> np.ndarray:
         """(len(rows), n_dev) boolean matrix of acceptable moves."""
@@ -204,15 +261,10 @@ class DenseState:
         # not already a member of the PG
         not_member = ~self.member[self.sh_pg[rows]]           # (R,n)
 
-        # failure-domain free (excluding the shard's own slot)
-        dom_ok = np.empty((len(rows), n), dtype=bool)
-        for i, r in enumerate(rows):
-            lvl = self.levels[self.sh_level[r]]
-            occ_row = self.occ[lvl][self.sh_pg[r], self.sh_step[r]]
-            peer = occ_row[self.dev_domain[lvl]]              # (n,)
-            own = self.dev_domain[lvl][src_idx]
-            peer = peer - (self.dev_domain[lvl] == own)
-            dom_ok[i] = peer <= 0
+        # failure-domain free (excluding the shard's own slot): pure array
+        # indexing against the incrementally-maintained occ_dev view
+        peer, _ = self.peer_occupancy(rows, src_idx)
+        dom_ok = peer <= 0
 
         # capacity fit
         cap_ok = (self.used[None, :] + sizes
@@ -311,16 +363,40 @@ if _HAVE_JAX:
 
 def balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                  record_trajectory: bool = False, use_jax: bool = False,
-                 pad_rows: int = 256, record_free_space: bool = True):
+                 pad_rows: int = 256, record_free_space: bool = True,
+                 engine: str | None = None):
     """Drop-in replacement for :func:`repro.core.equilibrium.balance` with
     identical outputs (move-for-move) and 1–3 orders of magnitude less
     planning time on paper-scale clusters.
 
-    ``use_jax=True`` routes the (rows × devices) evaluation through a jitted
-    kernel with rows padded to ``pad_rows`` (one compilation per pad size);
-    the default NumPy path has no warm-up cost and wins below ~10⁴ devices.
+    ``engine`` selects among the three implementations (all bit-identical):
+
+    * ``"numpy"`` — the dense-NumPy path below; no warm-up cost, the
+      small-cluster default (``use_jax=False``).
+    * ``"batch"`` — the device-resident chunked-scan engine
+      (:func:`repro.core.equilibrium_batch.balance_batch`); the
+      ``use_jax=True`` path, O(1) host syncs per chunk of moves.
+    * ``"jax-legacy"`` — the first-generation per-source jitted kernel
+      (one dispatch + one blocking sync per source per move), retained as
+      the measured baseline for benchmarks/bench_planner.py.
+
+    When JAX is unavailable every engine falls back to NumPy.
     """
     cfg = cfg or EquilibriumConfig()
+    if engine is None:
+        engine = "batch" if use_jax else "numpy"
+    if engine not in ("numpy", "batch", "jax-legacy"):
+        raise ValueError(f"unknown engine {engine!r}: "
+                         "expected 'numpy', 'batch' or 'jax-legacy'")
+    if engine == "batch":
+        if _HAVE_JAX:
+            from .equilibrium_batch import balance_batch
+            return balance_batch(state, cfg,
+                                 record_trajectory=record_trajectory,
+                                 record_free_space=record_free_space)
+        engine = "numpy"                        # pragma: no cover
+    use_legacy_jax = engine == "jax-legacy" and _HAVE_JAX
+
     dense = DenseState(state)
     movements: list[Movement] = []
     records: list[MoveRecord] = []
@@ -336,7 +412,7 @@ def balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
             rows = dense.source_rows(src_idx)
             if rows.size == 0:
                 continue
-            if use_jax and _HAVE_JAX:
+            if use_legacy_jax:
                 picked = _pick_jax(dense, rows, src_idx, cfg, pad_rows)
             else:
                 valid = dense.valid_matrix(rows, src_idx, cfg)
@@ -377,13 +453,7 @@ def _pick_jax(dense: DenseState, rows: np.ndarray, src_idx: int,
     member = padded(dense.member[dense.sh_pg[rows]], True)
     # peer occupancy with the shard's own source domain already subtracted
     # (levels differ per row, so folding it here is simpler than in-kernel).
-    peer = np.zeros((P, n), dtype=np.int16)
-    for i, r in enumerate(rows):
-        lvl = dense.levels[dense.sh_level[r]]
-        occ_row = dense.occ[lvl][dense.sh_pg[r], dense.sh_step[r]]
-        own = dense.dev_domain[lvl][src_idx]
-        peer[i] = occ_row[dense.dev_domain[lvl]]
-        peer[i] -= (dense.dev_domain[lvl] == own).astype(np.int16)
+    peer = padded(dense.peer_occupancy(rows, src_idx)[0])
     own_dom_eq = np.zeros(n, dtype=bool)          # folded into peer above
 
     pool_rows = dense.sh_pool[rows]

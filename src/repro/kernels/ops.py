@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_fwd
+from .select_move import masked_select_fwd
 from .ssd_scan import ssd_scan_fwd
 
 
@@ -34,6 +35,19 @@ def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
                               cap=cap, block_q=block_q, block_k=block_k,
                               interpret=interpret)
     return out.reshape(B, H, T, Dh).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def masked_select(valid, util, *, block_rows=256, interpret=False):
+    """Masked move-selection reduction (the batched planner's inner kernel).
+
+    valid (M, D) bool/uint8, util (D,) → (any (M,) bool, dst (M,) int32):
+    per candidate row, whether any destination is legal and the
+    emptiest legal destination (min util, ties → lowest device index).
+    Also callable inside an enclosing jit/scan (the planner's hot loop).
+    """
+    return masked_select_fwd(valid, util, block_rows=block_rows,
+                             interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

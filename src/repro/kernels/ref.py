@@ -32,6 +32,21 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, cap=None,
     return jnp.einsum("btu,bud->btd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def masked_select_ref(valid, util):
+    """Masked move-selection reduction reference.
+
+    valid: (M, D) bool — legality of destination d for candidate row m;
+    util: (D,) — device utilizations.  Returns per row:
+    ``any`` (M,) bool — row has a legal destination — and ``dst`` (M,)
+    int32 — the emptiest legal destination (first index on ties, i.e. the
+    faithful planner's stable emptiest-first scan order).  Rows with no
+    legal destination return dst 0; callers must gate on ``any``.
+    """
+    valid = valid != 0
+    masked = jnp.where(valid, util[None, :], jnp.inf)
+    return valid.any(axis=1), jnp.argmin(masked, axis=1).astype(jnp.int32)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm):
     """Token-level SSD recurrence reference.
 

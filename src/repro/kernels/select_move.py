@@ -1,0 +1,83 @@
+"""Pallas kernel: masked move-selection reduction for the batched planner.
+
+The device-resident Equilibrium engine (:mod:`repro.core.equilibrium_batch`)
+evaluates a ``(k_sources × row_block, n_devices)`` legality matrix per
+planning step and then needs, **per candidate shard row**:
+
+* ``any``  — does the row have at least one legal destination, and
+* ``dst``  — the emptiest legal destination (min utilization, ties broken
+  toward the lowest device index — the faithful planner's stable scan
+  order).
+
+That is a masked-argmin row reduction: ``argmin_d where(valid, util, +inf)``.
+This module provides the Pallas formulation — grid over row blocks, one
+``(block_rows, n_dev)`` tile in VMEM per step, the ``util`` vector
+broadcast to every step — matching ``masked_select_ref`` in
+:mod:`repro.kernels.ref` bit-for-bit (property-tested in
+tests/test_kernels.py).
+
+On TPU the call sites compile to Mosaic (pad ``n_dev`` to a lane multiple
+and use float32 utilization); on this CPU container the kernel runs with
+``interpret=True``.  The planner's default CPU backend is the jnp
+reference (identical semantics, no interpreter overhead); the Pallas path
+is selected with ``select_backend="pallas"`` or automatically on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _select_kernel(valid_ref, util_ref, any_ref, dst_ref):
+    """One grid step: a (block_rows, D) tile of the validity matrix."""
+    valid = valid_ref[...] != 0                       # (bm, D) bool
+    util = util_ref[...]                              # (D,)
+    masked = jnp.where(valid, util[None, :], jnp.inf)
+    any_ref[...] = valid.any(axis=1)
+    dst_ref[...] = jnp.argmin(masked, axis=1).astype(jnp.int32)
+
+
+def masked_select_fwd(valid: jax.Array, util: jax.Array, *,
+                      block_rows: int = 256,
+                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """valid: (M, D) uint8/bool, util: (D,) → (any (M,) bool, dst (M,) int32).
+
+    Rows are padded to a ``block_rows`` multiple and the device axis to a
+    128-lane multiple (padding is invalid / +inf, so it never wins the
+    argmin and never sets ``any``).
+    """
+    M, D = valid.shape
+    bm = min(block_rows, max(M, 1))
+    nm = -(-M // bm)
+    pad_m = nm * bm - M
+    pad_d = (-D) % 128
+    if valid.dtype != jnp.uint8:
+        valid = valid.astype(jnp.uint8)
+    if pad_m or pad_d:
+        valid = jnp.pad(valid, ((0, pad_m), (0, pad_d)))
+    if pad_d:
+        util = jnp.pad(util, (0, pad_d), constant_values=jnp.inf)
+    Dp = D + pad_d
+
+    any_out, dst_out = pl.pallas_call(
+        _select_kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((Dp,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nm * bm,), jnp.bool_),
+            jax.ShapeDtypeStruct((nm * bm,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(valid, util)
+    return any_out[:M], dst_out[:M]

@@ -1,0 +1,72 @@
+"""Optional-import shim for hypothesis (tier-1 collection guard).
+
+The container image does not ship hypothesis; without this shim the four
+property-testing modules fail at *collection* and take the whole tier-1
+run down with them.  Importing ``given``/``settings``/``strategies`` from
+here keeps every example-based test in those modules runnable: when
+hypothesis is installed the real API is re-exported unchanged (property
+tests run normally); when it is missing, ``@given`` replaces the test
+with a skip and the strategy objects become inert placeholders.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, assume, given, settings, strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert placeholder: supports the combinator surface used in
+        tests (map/filter/flatmap/|) but never generates examples."""
+
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def map(self, f):
+            return self
+
+        def filter(self, f):
+            return self
+
+        def flatmap(self, f):
+            return self
+
+        def __or__(self, other):
+            return self
+
+    class _Strategies:
+        """Any ``st.<name>(...)`` call returns an inert strategy;
+        ``@st.composite`` wraps the function into a strategy factory."""
+
+        def __getattr__(self, name):
+            if name == "composite":
+                return lambda f: (lambda *a, **k: _Strategy())
+            return lambda *a, **k: _Strategy()
+
+    strategies = _Strategies()
+
+    class HealthCheck:
+        all = staticmethod(lambda: [])
+        too_slow = data_too_large = filter_too_much = None
+
+    def assume(condition):
+        return True
+
+    def given(*given_args, **given_kwargs):
+        def decorate(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped(*args, **kwargs):  # pragma: no cover
+                pass
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+        return decorate
+
+    def settings(*args, **kwargs):
+        def decorate(f):
+            return f
+        return decorate

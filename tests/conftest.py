@@ -1,0 +1,1 @@
+"""Ensures the tests directory is importable (``_hypothesis_compat``)."""

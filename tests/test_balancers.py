@@ -3,7 +3,7 @@ claims, on cluster scales small enough for CI)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Device, EquilibriumConfig, MgrBalancerConfig,
                         PlacementRule, Pool, TiB, build_cluster,

@@ -3,7 +3,7 @@ accounting, max-avail semantics)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (ClusterState, Device, Movement, PlacementRule, Pool,
                         RuleStep, TiB, build_cluster, small_test_cluster)

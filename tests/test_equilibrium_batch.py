@@ -1,0 +1,174 @@
+"""The device-resident batched planner must produce *identical* move
+sequences to the faithful §3.1 implementation — same shards, same
+destinations, same order — across multi-pool, multi-class, hybrid-rule
+and EC clusters, every tile shape, padding boundaries, and config
+variations; and it must plan whole chunks of moves per host round-trip
+(O(1) syncs per chunk, not O(k) per move)."""
+
+import numpy as np
+import pytest
+
+from repro.core import EquilibriumConfig, equilibrium_balance, small_test_cluster
+from repro.core.clustergen import cluster_a, cluster_c, cluster_f
+from repro.core.equilibrium_batch import balance_batch, host_sync_count
+from repro.core.equilibrium_jax import DenseState, balance_fast
+
+
+def as_tuples(moves):
+    return [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in moves]
+
+
+# ---------------------------------------------------------------------------
+# bit-identical move sequences vs the faithful planner
+
+
+def test_batch_matches_faithful_small():
+    cfg = EquilibriumConfig()
+    faithful_state = small_test_cluster()
+    batch_state = small_test_cluster()
+    a, _ = equilibrium_balance(faithful_state, cfg)
+    b, recs = balance_batch(batch_state, cfg, record_trajectory=True)
+    assert as_tuples(a) == as_tuples(b)
+    assert np.isclose(faithful_state.utilization_variance(),
+                      batch_state.utilization_variance())
+    batch_state.check_valid()
+    assert all(r.sources_tried >= 1 for r in recs)
+
+
+def test_batch_matches_faithful_cluster_a():
+    """Cluster A: multi-pool replicated, full convergence."""
+    cfg = EquilibriumConfig()
+    a, _ = equilibrium_balance(cluster_a(), cfg)
+    b, _ = balance_batch(cluster_a(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_batch_matches_faithful_cluster_c():
+    """Cluster C: two device classes (hdd + nvme), multi-pool, full run."""
+    cfg = EquilibriumConfig(max_moves=200)
+    a, _ = equilibrium_balance(cluster_c(), cfg)
+    b, _ = balance_batch(cluster_c(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_batch_matches_faithful_cluster_f():
+    """Cluster F: single-class single-big-pool, 78 OSDs."""
+    cfg = EquilibriumConfig(max_moves=200)
+    a, _ = equilibrium_balance(cluster_f(), cfg)
+    b, _ = balance_batch(cluster_f(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_batch_matches_numpy_hybrid_rule():
+    """Cluster D's hybrid 1×ssd+2×hdd rule (multi-step slot geometry);
+    compared against the dense-NumPy engine (itself property-equal to the
+    faithful planner) to keep runtime reasonable."""
+    from repro.core.clustergen import cluster_d
+    cfg = EquilibriumConfig(max_moves=120)
+    a, _ = balance_fast(cluster_d(), cfg)
+    b, _ = balance_batch(cluster_d(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(count_slack=1.0, k=5),
+    dict(headroom=0.1),
+    dict(min_variance_delta=1e-12),
+    dict(k=100),                    # k > n_devices
+])
+def test_batch_matches_faithful_config_variants(kwargs):
+    cfg = EquilibriumConfig(**kwargs)
+    a, _ = equilibrium_balance(small_test_cluster(), cfg)
+    b, _ = balance_batch(small_test_cluster(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+@pytest.mark.parametrize("source_block,row_block", [
+    (1, 1),          # minimal tiles
+    (3, 5),          # ragged blocks (k=25 not a multiple of 3)
+    (25, 64),        # the full (k, R_max, n_dev) tensor in one iteration
+])
+def test_batch_tile_shapes_identical(source_block, row_block):
+    """Tile shape is a performance knob, never a semantics knob."""
+    cfg = EquilibriumConfig()
+    a, _ = equilibrium_balance(small_test_cluster(), cfg)
+    b, _ = balance_batch(small_test_cluster(), cfg,
+                         source_block=source_block, row_block=row_block)
+    assert as_tuples(a) == as_tuples(b)
+
+
+# ---------------------------------------------------------------------------
+# padding boundaries: row_capacity at / over the per-device row count
+
+
+def test_batch_row_capacity_at_exact_boundary():
+    """row_capacity == max rows/device: destinations fill the table and
+    force the mid-run re-pad path; the sequence must not change."""
+    cfg = EquilibriumConfig()
+    a, _ = equilibrium_balance(small_test_cluster(), cfg)
+    mx = max(len(s) for s in DenseState(small_test_cluster()).rows_on_dev)
+    b, _ = balance_batch(small_test_cluster(), cfg, row_capacity=mx, chunk=4)
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_batch_row_capacity_clamped_below_occupancy():
+    """A row_capacity below the densest device must be clamped up, not
+    silently truncate candidate rows."""
+    cfg = EquilibriumConfig()
+    a, _ = equilibrium_balance(small_test_cluster(), cfg)
+    b, _ = balance_batch(small_test_cluster(), cfg, row_capacity=1,
+                         chunk=3, row_block=3)
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_batch_small_chunks_identical():
+    """Chunk length only changes host round-trips, never the sequence."""
+    cfg = EquilibriumConfig()
+    a, _ = equilibrium_balance(small_test_cluster(), cfg)
+    b, _ = balance_batch(small_test_cluster(), cfg, chunk=5)
+    assert as_tuples(a) == as_tuples(b)
+
+
+# ---------------------------------------------------------------------------
+# host-sync regression: O(1) per chunk, not O(k) per move
+
+
+def test_batch_host_syncs_constant_per_chunk():
+    """The seed jax path blocked on bool(found) once per source per move
+    (~k×moves syncs); the batched engine must transfer once per chunk."""
+    cfg = EquilibriumConfig()
+    state = small_test_cluster()
+    before = host_sync_count()
+    moves, _ = balance_batch(state, cfg, chunk=8)
+    syncs = host_sync_count() - before
+    assert len(moves) > 10
+    n_chunks = -(-len(moves) // 8) + 1          # +1: the final empty chunk
+    assert syncs <= n_chunks + 2, (syncs, len(moves))
+    assert syncs < len(moves), "syncing per move defeats the batched design"
+
+
+def test_batch_use_jax_delegates_to_batched_engine():
+    """balance_fast(use_jax=True) is the batched engine (same sequence,
+    chunked syncs) — the per-source legacy path is opt-in only."""
+    cfg = EquilibriumConfig()
+    a, _ = balance_fast(small_test_cluster(), cfg, use_jax=True)
+    b, _ = balance_batch(small_test_cluster(), cfg)
+    assert as_tuples(a) == as_tuples(b)
+
+
+# ---------------------------------------------------------------------------
+# kernel backend: the Pallas masked-select path is interchangeable
+
+
+def test_batch_pallas_backend_identical():
+    cfg = EquilibriumConfig()
+    a, _ = balance_batch(small_test_cluster(), cfg)
+    b, _ = balance_batch(small_test_cluster(), cfg, select_backend="pallas")
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_batch_empty_and_degenerate_clusters():
+    from repro.core import ClusterState, Device, PlacementRule, Pool, TiB
+    devs = [Device(id=0, capacity=8 * TiB, device_class="hdd", host="h0")]
+    st = ClusterState(devs, [], {}, {})
+    assert balance_batch(st, EquilibriumConfig()) == ([], [])

@@ -5,7 +5,7 @@ paper's semantics, delete the planning-time limitation)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Device, EquilibriumConfig, PlacementRule, Pool, TiB,
                         build_cluster, equilibrium_balance, small_test_cluster)
@@ -55,6 +55,30 @@ def test_fast_matches_faithful_with_slack_and_k():
     a, _ = equilibrium_balance(small_test_cluster(), cfg)
     b, _ = balance_fast(small_test_cluster(), cfg)
     assert as_tuples(a) == as_tuples(b)
+
+
+def test_legacy_jax_engine_matches_faithful():
+    """The retained first-generation per-source jitted path (the
+    benchmark baseline) still produces the faithful sequence."""
+    cfg = EquilibriumConfig()
+    a, _ = equilibrium_balance(small_test_cluster(), cfg)
+    b, _ = balance_fast(small_test_cluster(), cfg, engine="jax-legacy")
+    assert as_tuples(a) == as_tuples(b)
+
+
+def test_peer_occupancy_matches_bruteforce():
+    """occ_dev (the incrementally-maintained per-device domain-occupancy
+    view) must agree with a per-row rebuild from the raw occ tables."""
+    st_ = small_test_cluster()
+    dense = DenseState(st_)
+    rows = np.arange(len(dense.shard_key))
+    peer, _ = dense.peer_occupancy(rows, 0)
+    for i, r in enumerate(rows[:64]):
+        lvl = dense.levels[dense.sh_level[r]]
+        occ_row = dense.occ[lvl][dense.sh_pg[r], dense.sh_step[r]]
+        expect = occ_row[dense.dev_domain[lvl]].astype(np.int16)
+        expect -= (dense.dev_domain[lvl] == dense.dev_domain[lvl][0])
+        assert np.array_equal(peer[i], expect)
 
 
 @st.composite

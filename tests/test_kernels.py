@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import flash_attention, ssd_scan
-from repro.kernels.ref import flash_attention_ref, ssd_scan_ref
+from repro.kernels.ops import flash_attention, masked_select, ssd_scan
+from repro.kernels.ref import (flash_attention_ref, masked_select_ref,
+                               ssd_scan_ref)
 
 TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -80,6 +81,48 @@ def test_flash_matches_model_attention():
                     causal=True, window=64)
     np.testing.assert_allclose(np.asarray(ker), np.asarray(mdl),
                                rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# masked move-selection reduction (the batched planner's inner kernel)
+
+
+@pytest.mark.parametrize("M,D,block_rows", [
+    (8, 16, 256),
+    (200, 995, 256),      # planner-shaped: k*row_block rows × OSDs
+    (100, 300, 32),       # multi-block grid with row padding
+    (1, 1, 8),
+])
+def test_masked_select_matches_ref(M, D, block_rows):
+    rng = np.random.default_rng(42)
+    valid = jnp.asarray(rng.random((M, D)) < 0.05)
+    util = jnp.asarray(rng.random(D).astype(np.float32))
+    any_k, dst_k = masked_select(valid, util, block_rows=block_rows,
+                                 interpret=True)
+    any_r, dst_r = masked_select_ref(valid, util)
+    np.testing.assert_array_equal(np.asarray(any_k), np.asarray(any_r))
+    # dst is defined only where a legal destination exists
+    sel = np.asarray(any_r)
+    np.testing.assert_array_equal(np.asarray(dst_k)[sel],
+                                  np.asarray(dst_r)[sel])
+
+
+def test_masked_select_tie_break_lowest_index():
+    """Equal-utilization legal destinations resolve to the lowest device
+    index — the faithful planner's stable emptiest-first scan order."""
+    valid = jnp.asarray(np.array([[True, True, True, False]]))
+    util = jnp.asarray(np.array([0.5, 0.2, 0.2, 0.0], np.float32))
+    for fn in (lambda v, u: masked_select(v, u, interpret=True),
+               masked_select_ref):
+        anyv, dst = fn(valid, util)
+        assert bool(anyv[0]) and int(dst[0]) == 1
+
+
+def test_masked_select_all_invalid_row():
+    valid = jnp.asarray(np.zeros((3, 7), bool))
+    util = jnp.asarray(np.linspace(0, 1, 7).astype(np.float32))
+    anyv, _ = masked_select(valid, util, interpret=True)
+    assert not np.asarray(anyv).any()
 
 
 # ---------------------------------------------------------------------------
