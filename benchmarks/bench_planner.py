@@ -55,7 +55,11 @@ def _seed_pick_jax(dense, rows, src_idx, cfg, pad_rows=256):
 
     sizes = padded(dense.sh_size[rows].astype(np.float64), -1.0)
     cls = padded(dense.sh_class[rows], 0)
-    member = padded(dense.member[dense.sh_pg[rows]], True)
+    u_src = dense.util[src_idx]
+    before_src = (dense.util < u_src) | ((dense.util == u_src)
+                                         & (np.arange(n) < src_idx))
+    member = padded(dense.member[dense.sh_pg[rows]]
+                    | ~dense.dev_in[None, :] | ~before_src[None, :], True)
     peer = np.zeros((P, n), dtype=np.int16)
     for i, r in enumerate(rows):                 # the hoisted-away loop
         lvl = dense.levels[dense.sh_level[r]]

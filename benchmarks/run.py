@@ -32,23 +32,37 @@ def main() -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as JSON (BENCH_planner.json "
                          "schema: name, us_per_call, derived, git_sha)")
+    ap.add_argument("--scenarios", action="store_true",
+                    help="run the lifecycle-scenario suite instead (all "
+                         "registered scenarios, equilibrium_batch vs mgr) "
+                         "and write BENCH_scenarios.json")
     args = ap.parse_args()
 
-    from benchmarks.paper_tables import (bench_planner_speed, bench_table1,
-                                         bench_timing, bench_trajectories)
-    from benchmarks.roofline import bench_roofline
+    if args.scenarios:
+        from benchmarks.bench_scenarios import bench_scenarios
 
-    table1_clusters = ("A", "C", "F") if args.quick else ("A", "B", "C",
-                                                          "D", "E", "F")
-    traj_clusters = ("A",) if args.quick else ("A", "B")
+        def scenario_suite():
+            _, rows = bench_scenarios(quick=args.quick)
+            return rows
 
-    suites = [
-        ("table1", lambda: bench_table1(table1_clusters)),
-        ("trajectories", lambda: bench_trajectories(traj_clusters)),
-        ("timing", lambda: bench_timing(traj_clusters)),
-        ("planner_speed", bench_planner_speed),
-        ("roofline", bench_roofline),
-    ]
+        suites = [("scenarios", scenario_suite)]
+    else:
+        from benchmarks.paper_tables import (bench_planner_speed,
+                                             bench_table1, bench_timing,
+                                             bench_trajectories)
+        from benchmarks.roofline import bench_roofline
+
+        table1_clusters = ("A", "C", "F") if args.quick else ("A", "B", "C",
+                                                              "D", "E", "F")
+        traj_clusters = ("A",) if args.quick else ("A", "B")
+
+        suites = [
+            ("table1", lambda: bench_table1(table1_clusters)),
+            ("trajectories", lambda: bench_trajectories(traj_clusters)),
+            ("timing", lambda: bench_timing(traj_clusters)),
+            ("planner_speed", bench_planner_speed),
+            ("roofline", bench_roofline),
+        ]
 
     sha = git_sha()
     json_rows = []

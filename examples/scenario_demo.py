@@ -1,0 +1,53 @@
+"""Run one lifecycle scenario and watch the cluster move.
+
+    PYTHONPATH=src python examples/scenario_demo.py \
+        --scenario cascading-failures --balancer equilibrium_batch
+
+Prints a per-tick table (physical utilization variance, max device
+utilization, transfer backlog, cumulative moved TiB) with event
+annotations, then the summary — the interactive view of what
+``python -m benchmarks.run --scenarios`` measures in bulk.
+"""
+
+import argparse
+
+from repro.core import TiB
+from repro.sim import BALANCERS, SCENARIOS, run_scenario
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--scenario", choices=sorted(SCENARIOS),
+                default="steady-growth")
+ap.add_argument("--balancer", choices=BALANCERS,
+                default="equilibrium_batch")
+ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--quick", action="store_true", help="short tick count")
+ap.add_argument("--stride", type=int, default=1,
+                help="print every Nth tick")
+args = ap.parse_args()
+
+print(f"scenario {args.scenario!r} ({SCENARIOS[args.scenario].description})")
+result = run_scenario(args.scenario, args.balancer, seed=args.seed,
+                      quick=args.quick)
+m = result["metrics"]
+events_at = {}
+for tick, desc in m["events"]:
+    events_at.setdefault(tick, []).append(desc.split("(")[0])
+
+print(f"{'tick':>5} {'variance':>10} {'max_util':>9} {'backlog':>8} "
+      f"{'moved_TiB':>10}  events")
+last = len(m["ticks"]) - 1
+for i, t in enumerate(m["ticks"]):
+    if i % args.stride and i != last:
+        continue
+    note = ",".join(events_at.get(t, []))
+    print(f"{t:>5} {m['variance'][i]:>10.6f} {m['max_util'][i]:>9.3f} "
+          f"{m['backlog_moves'][i]:>8} "
+          f"{m['transferred_bytes'][i] / TiB:>10.2f}  {note}")
+
+s = m["summary"]
+print(f"\n{args.balancer}: final variance {s['final_variance']:.3e} "
+      f"(target {s['final_variance_target']:.3e}), "
+      f"moved {s['total_transferred_bytes'] / TiB:.2f} TiB in "
+      f"{s['total_planned_moves']} planned moves, "
+      f"{s['ticks_above_threshold']} ticks above fullness threshold, "
+      f"{s['final_degraded']} degraded shards")

@@ -6,16 +6,19 @@ from .cluster import (ClusterState, Device, Movement, PlacementRule, Pool,
 from .crush import build_cluster, place_pg
 from .clustergen import PAPER_CLUSTERS, small_test_cluster
 from .equilibrium import EquilibriumConfig, balance as equilibrium_balance
-from .equilibrium_batch import balance_batch
+from .equilibrium_batch import BatchPlanner, balance_batch
 from .equilibrium_jax import DenseState, balance_fast
 from .mgr_balancer import MgrBalancerConfig, balance as mgr_balance
-from .simulate import SimulationResult, compare_balancers, simulate
+from .simulate import (MovementThrottle, SimulationResult, ThrottleConfig,
+                       ThrottledReplayResult, compare_balancers, simulate,
+                       simulate_throttled)
 
 __all__ = [
     "ClusterState", "Device", "Movement", "PlacementRule", "Pool", "RuleStep",
     "TiB", "GiB", "build_cluster", "place_pg", "PAPER_CLUSTERS",
     "small_test_cluster", "EquilibriumConfig", "equilibrium_balance",
-    "DenseState", "balance_fast", "balance_batch",
+    "DenseState", "balance_fast", "balance_batch", "BatchPlanner",
     "MgrBalancerConfig", "mgr_balance", "SimulationResult",
-    "compare_balancers", "simulate",
+    "compare_balancers", "simulate", "MovementThrottle", "ThrottleConfig",
+    "ThrottledReplayResult", "simulate_throttled",
 ]

@@ -172,12 +172,20 @@ class ClusterState:
 
     def __init__(self, devices: Sequence[Device], pools: Sequence[Pool],
                  acting: dict[PGId, list[int]],
-                 shard_sizes: dict[PGId, float]):
+                 shard_sizes: dict[PGId, float],
+                 out_osds: Iterable[int] = ()):
         self.devices: list[Device] = list(devices)
         self.pools: dict[int, Pool] = {p.id: p for p in pools}
         self.acting: dict[PGId, list[int]] = {k: list(v) for k, v in acting.items()}
         self.shard_sizes: dict[PGId, float] = dict(shard_sizes)
         self.dev_by_id: dict[int, Device] = {d.id: d for d in self.devices}
+        # OSDs marked "out" (weight 0): excluded from ideal counts, pool
+        # growth, and move destinations — a draining or failed device.
+        self.out_osds: set[int] = set(out_osds)
+        # Bumped on every mutation (apply / add_device / mark_out /
+        # grow_pool / add_pool): lets incremental planners detect that their
+        # dense mirror of this state went stale (see BatchPlanner).
+        self.mutation_epoch: int = 0
 
         self._capacity = np.array([d.capacity for d in self.devices], dtype=np.float64)
         self._id_to_idx = {d.id: i for i, d in enumerate(self.devices)}
@@ -188,6 +196,11 @@ class ClusterState:
         self.pool_counts: dict[int, np.ndarray] = {
             p: np.zeros(len(self.devices), dtype=np.int64) for p in self.pools
         }
+        # per-pool PG registry (maintained by add_pool; pool membership of a
+        # PG never changes after creation)
+        self.pgs_of_pool: dict[int, list[PGId]] = {p: [] for p in self.pools}
+        for pg in sorted(self.acting):
+            self.pgs_of_pool[pg[0]].append(pg)
         for pg, osds in self.acting.items():
             size = self.shard_sizes[pg]
             for slot, osd in enumerate(osds):
@@ -206,7 +219,13 @@ class ClusterState:
 
     def copy(self) -> "ClusterState":
         return ClusterState(self.devices, list(self.pools.values()),
-                            self.acting, self.shard_sizes)
+                            self.acting, self.shard_sizes, self.out_osds)
+
+    def in_mask(self) -> np.ndarray:
+        """Boolean per-device vector: True for weighted ("in") devices."""
+        if not self.out_osds:
+            return np.ones(self.n_devices, dtype=bool)
+        return np.array([d.id not in self.out_osds for d in self.devices])
 
     # -- accounting --------------------------------------------------------
 
@@ -247,12 +266,13 @@ class ClusterState:
         for hybrid rules each step's shards are apportioned within its own
         device class."""
         ideal = np.zeros(self.n_devices, dtype=np.float64)
+        in_mask = self.in_mask()
         for step in pool.rule.steps:
             if step.device_class is None:
-                mask = np.ones(self.n_devices, dtype=bool)
+                mask = in_mask.copy()
             else:
                 mask = np.array([d.device_class == step.device_class
-                                 for d in self.devices])
+                                 for d in self.devices]) & in_mask
             cap = np.where(mask, self._capacity, 0.0)
             total = cap.sum()
             if total <= 0:
@@ -266,13 +286,14 @@ class ClusterState:
         what Ceph's ``MAX AVAIL`` assumes).  Replicated: each of the rule's
         shards stores the full payload; EC(k,m): each shard stores 1/k."""
         growth = np.zeros(self.n_devices, dtype=np.float64)
+        in_mask = self.in_mask()
         payload_per_shard = 1.0 if pool.ec_k == 0 else 1.0 / pool.ec_k
         for step in pool.rule.steps:
             if step.device_class is None:
-                mask = np.ones(self.n_devices, dtype=bool)
+                mask = in_mask.copy()
             else:
                 mask = np.array([d.device_class == step.device_class
-                                 for d in self.devices])
+                                 for d in self.devices]) & in_mask
             cap = np.where(mask, self._capacity, 0.0)
             total = cap.sum()
             if total <= 0:
@@ -319,6 +340,8 @@ class ClusterState:
         pool = self.pools[pg[0]]
         step = pool.rule.step_of_slot(slot)
         dst = self.dev_by_id[dst_osd]
+        if dst_osd in self.out_osds:
+            return False
         if step.device_class is not None and dst.device_class != step.device_class:
             return False
         osds = self.acting[pg]
@@ -359,9 +382,80 @@ class ClusterState:
         self.shards_on[mv.dst_osd].add((mv.pg, mv.slot))
         self.pool_counts[mv.pg[0]][si] -= 1
         self.pool_counts[mv.pg[0]][di] += 1
+        self.mutation_epoch += 1
 
     def undo(self, mv: Movement) -> None:
         self.apply(Movement(mv.pg, mv.slot, mv.dst_osd, mv.src_osd, mv.size))
+
+    # -- lifecycle mutation (the scenario engine's event surface) ------------
+
+    def add_device(self, dev: Device) -> None:
+        """Grow the cluster by one OSD (expansion).  The new device starts
+        empty; CRUSH re-placement of existing PGs is the caller's job
+        (see repro.sim.engine)."""
+        if dev.id in self.dev_by_id:
+            raise ValueError(f"osd.{dev.id} already exists")
+        self.devices.append(dev)
+        self.dev_by_id[dev.id] = dev
+        self._id_to_idx[dev.id] = len(self.devices) - 1
+        self._capacity = np.append(self._capacity, float(dev.capacity))
+        self._used = np.append(self._used, 0.0)
+        self.shards_on[dev.id] = set()
+        for p in self.pool_counts:
+            self.pool_counts[p] = np.append(self.pool_counts[p], 0)
+        self.mutation_epoch += 1
+
+    def mark_out(self, osd_id: int, out: bool = True) -> None:
+        """Set an OSD's weight to 0 ("out") or restore it ("in").  An out
+        device stops receiving placements (ideal counts, pool growth, move
+        destinations); data already on it must be re-placed by the caller."""
+        if osd_id not in self.dev_by_id:
+            raise KeyError(f"unknown osd.{osd_id}")
+        if out:
+            self.out_osds.add(osd_id)
+        else:
+            self.out_osds.discard(osd_id)
+        self.mutation_epoch += 1
+
+    def grow_pool(self, pool_id: int, user_bytes: float) -> None:
+        """Ingest ``user_bytes`` of user data into a pool: every PG's shard
+        grows by the pool's per-shard growth factor (uniform across PGs —
+        the paper's "shard sizes in a pool are almost equal" premise; the
+        initial per-PG jitter is preserved as an offset)."""
+        pool = self.pools[pool_id]
+        delta = user_bytes * pool.shard_growth_factor
+        if delta == 0.0:
+            return
+        self.pools[pool_id] = dataclasses.replace(
+            pool, stored_bytes=pool.stored_bytes + user_bytes)
+        for pg in self.pgs_of_pool[pool_id]:
+            self.shard_sizes[pg] += delta
+            for osd in self.acting[pg]:
+                self._used[self._id_to_idx[osd]] += delta
+        self.mutation_epoch += 1
+
+    def add_pool(self, pool: Pool, acting: dict[PGId, list[int]],
+                 shard_sizes: dict[PGId, float]) -> None:
+        """Register a freshly created pool with its (CRUSH-placed) acting
+        sets and per-PG shard sizes."""
+        if pool.id in self.pools:
+            raise ValueError(f"pool {pool.id} already exists")
+        self.pools[pool.id] = pool
+        self.pool_counts[pool.id] = np.zeros(self.n_devices, dtype=np.int64)
+        self.pgs_of_pool[pool.id] = []
+        for pg in sorted(acting):
+            if pg[0] != pool.id:
+                raise ValueError(f"acting key {pg} not in pool {pool.id}")
+            osds = list(acting[pg])
+            size = shard_sizes[pg]
+            self.acting[pg] = osds
+            self.shard_sizes[pg] = size
+            self.pgs_of_pool[pool.id].append(pg)
+            for slot, osd in enumerate(osds):
+                self._used[self._id_to_idx[osd]] += size
+                self.shards_on[osd].add((pg, slot))
+                self.pool_counts[pool.id][self._id_to_idx[osd]] += 1
+        self.mutation_epoch += 1
 
     # -- integrity (used by tests / property checks) -------------------------
 

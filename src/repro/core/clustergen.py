@@ -222,6 +222,44 @@ PAPER_CLUSTERS = {
 }
 
 
+def sim_cluster(seed: int = 0, n_hdd: int = 30, n_ssd: int = 6,
+                fill: float = 0.5, size_jitter: float = 0.12):
+    """Mid-size heterogeneous cluster for lifecycle scenarios
+    (:mod:`repro.sim`): two HDD capacity tiers (±35%), a big EC-style pool
+    with large shards next to small-shard pools — the regime where
+    count-balanced (mgr) and size-balanced (Equilibrium) placements
+    diverge, and small enough that a multi-hundred-tick scenario runs in
+    CI seconds.  ``fill`` sets initial utilization so growth/failure
+    events have headroom to push against."""
+    specs = [(n_hdd, n_hdd * 10 * TiB, "hdd")]
+    if n_ssd > 0:
+        specs.append((n_ssd, n_ssd * 3 * TiB, "ssd"))
+    devices = _make_devices(specs, osds_per_host=3, seed=seed)
+    r3_hdd = PlacementRule.replicated(3, "host", "hdd")
+    hdd_total = n_hdd * 10 * TiB
+    budget = fill * hdd_total / 3.0              # user bytes @ 3x replication
+    pools = [
+        Pool(0, "rbd", 128, r3_hdd, stored_bytes=budget * 0.55),
+        Pool(1, "objects", 64, r3_hdd, stored_bytes=budget * 0.35),
+        Pool(2, "backup", 32, r3_hdd, stored_bytes=budget * 0.10),
+    ]
+    if n_ssd > 0:
+        r3_ssd = PlacementRule.replicated(3, "host", "ssd")
+        ssd_total = n_ssd * 3 * TiB
+        pools.append(Pool(3, "meta", 32, r3_ssd,
+                          stored_bytes=fill * ssd_total / 2 * 0.4,
+                          is_user_data=False))
+    state = build_cluster(devices, pools, seed=seed, size_jitter=size_jitter)
+    max_util = float(state.utilization().max())
+    if max_util > _MAX_INITIAL_UTIL:         # same guard as _build_capped,
+        scale = _MAX_INITIAL_UTIL / max_util  # keeping the larger jitter
+        pools = [dataclass_replace(p, stored_bytes=p.stored_bytes * scale)
+                 for p in pools]
+        state = build_cluster(devices, pools, seed=seed,
+                              size_jitter=size_jitter)
+    return state
+
+
 def small_test_cluster(n_hdd: int = 12, n_ssd: int = 4, seed: int = 0,
                        fill: float = 0.6):
     """Tiny heterogeneous cluster for unit/property tests."""

@@ -78,11 +78,18 @@ except Exception:  # pragma: no cover
 
 
 _SYNC_COUNT = 0
+_REBUILD_COUNT = 0
 
 
 def host_sync_count() -> int:
     """Total device→host transfers issued by this engine (test hook)."""
     return _SYNC_COUNT
+
+
+def dense_rebuild_count() -> int:
+    """Total from-scratch dense-state builds (test hook for the warm-start
+    path: consecutive plans on an unchanged cluster must not rebuild)."""
+    return _REBUILD_COUNT
 
 
 def _fetch(tree):
@@ -130,13 +137,13 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
 
     dyn   = (used, util, util_sum, util_sumsq, acting, pool_counts,
              dst_ok, rows_on, nrows, order)         — mutated functionally
-    const = (cap, dev_class, dev_domain, sh_size, sh_pg, sh_pool,
+    const = (cap, dev_class, dev_in, dev_domain, sh_size, sh_pg, sh_pool,
              sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal)
 
     Returns (dyn', done, overflow, moves (m, 4) int32) where each move row
     is (shard_row, src_idx, dst_idx, sources_tried) or -1 sentinels.
     """
-    (cap, dev_class, dev_domain, sh_size, sh_pg, sh_pool,
+    (cap, dev_class, dev_in, dev_domain, sh_size, sh_pg, sh_pool,
      sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal) = const
     n_dev = cap.shape[0]
     n_slots = dyn[4].shape[1]
@@ -206,8 +213,16 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             new_var = (usq + dsq) / n_f - ((us + dsum) / n_f) ** 2
             var_ok = (new_var - old_var) < -min_dvar
             not_self = dev_iota[None, None, :] != src_b[:, None, None]
+            # faithful destination cutoff: only devices strictly before the
+            # source in the stable emptiest-first order (util asc, index
+            # asc on ties) are candidates
+            before_src = ((util[None, None, :] < u_s)
+                          | ((util[None, None, :] == u_s)
+                             & (dev_iota[None, None, :]
+                                < src_b[:, None, None])))
             return (class_ok & ~bad & cap_ok & crit & var_ok
-                    & (real & src_ok)[..., None] & not_self)
+                    & (real & src_ok)[..., None] & not_self
+                    & dev_in[None, None, :] & before_src)
 
         def body(carry):
             (sb, c, found_row, found_dst,
@@ -372,6 +387,221 @@ def _pack_rows(rows_on_dev, sh_size: np.ndarray, r_cap: int) -> np.ndarray:
     return rows
 
 
+class BatchPlanner:
+    """Warm-startable handle on the device-resident engine.
+
+    :func:`balance_batch` rebuilt the full dense mirror — DenseState, the
+    packed row tables, the acting table, every device array — on *every*
+    call, even when nothing changed since the last plan.  The scenario
+    engine (:mod:`repro.sim.engine`) calls the planner every
+    ``RebalanceTick``, usually with a small per-tick move budget, so the
+    rebuild would dominate: this class keeps the device carry (``dyn``)
+    alive between calls and resumes planning from it whenever the bound
+    :class:`ClusterState` has not been mutated by anyone else.
+
+    Staleness is detected through ``state.mutation_epoch``: the planner
+    records the epoch after replaying its own emitted moves; any external
+    mutation (pool growth, device add/out, another balancer's apply) makes
+    the epochs disagree and forces a rebuild.  Because the §3.1 sequence
+    is deterministic, a warm continuation emits exactly the moves a
+    cold-start planner would (property-tested in
+    tests/test_equilibrium_batch.py), including moves the device planned
+    past a call's budget — those are stashed (they are already applied in
+    the device carry) and emitted first by the next call.
+    """
+
+    def __init__(self, state: ClusterState,
+                 cfg: EquilibriumConfig | None = None, chunk: int = 64,
+                 source_block: int = 1, row_block: int = 8,
+                 row_capacity: int | None = None,
+                 select_backend: str = "auto"):
+        self.state = state
+        self.cfg = cfg or EquilibriumConfig()
+        self.chunk = chunk
+        self.row_capacity = row_capacity
+        if select_backend == "auto":
+            select_backend = ("pallas-tpu" if jax.default_backend() == "tpu"
+                              else "ref")
+        self.select_backend = select_backend
+        self._k = min(self.cfg.k, max(state.n_devices, 1))
+        self._kb = min(max(1, source_block), self._k)
+        self._rb = max(1, row_block)
+        self._dense = None
+        self._dyn = None
+        self._epoch = -1                # state.mutation_epoch at last sync
+        self._done = False
+        # moves the device already planned+applied in the carry but the
+        # host has not yet emitted: (row, src, dst, tried, seconds)
+        self._stash: list[tuple[int, int, int, int, float]] = []
+
+    # -- dense-state lifecycle ----------------------------------------------
+
+    def _round_cap(self, n: int) -> int:
+        return max(self._rb, -(-int(n) // self._rb) * self._rb)
+
+    def _build(self) -> None:
+        """Full rebuild of the device mirror from ``self.state``."""
+        global _REBUILD_COUNT
+        _REBUILD_COUNT += 1
+        from .equilibrium_jax import DenseState
+
+        state, cfg = self.state, self.cfg
+        self._stash = []
+        self._done = False
+        self._dense = None
+        self._dyn = None
+        self._k = min(cfg.k, max(state.n_devices, 1))
+        self._kb = min(self._kb, self._k)
+        if not state.acting or not state.pools or state.n_devices < 2:
+            self._epoch = state.mutation_epoch
+            return
+        dense = DenseState(state)
+        if not dense.shard_key:
+            self._epoch = state.mutation_epoch
+            return
+        self._dense = dense
+
+        # compact acting table (n_pg, max pool size), padded with -1
+        n_slots = max(p.size for p in state.pools.values())
+        acting_np = np.full((len(dense.pgs), n_slots), -1, np.int32)
+        for pg, pgi in dense.pg_index.items():
+            osds = state.acting[pg]
+            acting_np[pgi, :len(osds)] = [state.idx(o) for o in osds]
+
+        self._const = (
+            jnp.asarray(dense.cap), jnp.asarray(dense.dev_class, jnp.int32),
+            jnp.asarray(dense.dev_in),
+            jnp.asarray(dense.dev_domain_arr, jnp.int32),
+            jnp.asarray(dense.sh_size.astype(np.float64)),
+            jnp.asarray(dense.sh_pg, jnp.int32),
+            jnp.asarray(dense.sh_pool, jnp.int32),
+            jnp.asarray(dense.sh_class, jnp.int32),
+            jnp.asarray(dense.sh_level, jnp.int32),
+            jnp.asarray(dense.sh_slot, jnp.int32),
+            jnp.asarray(dense.sh_sbase, jnp.int32),
+            jnp.asarray(dense.sh_scnt, jnp.int32),
+            jnp.asarray(dense.ideal),
+        )
+        nrows_np = np.array([len(s) for s in dense.rows_on_dev], np.int32)
+        dst_ok_np = (np.abs(dense.pool_counts + 1.0 - dense.ideal)
+                     <= np.abs(dense.pool_counts - dense.ideal)
+                     + cfg.count_slack)
+        order_np = np.argsort(-dense.util, kind="stable").astype(np.int32)
+        self._r_cap = self._round_cap(
+            max(self.row_capacity, int(nrows_np.max()))
+            if self.row_capacity is not None
+            else int(nrows_np.max()) + self.chunk)
+        self._dyn = (
+            jnp.asarray(dense.used), jnp.asarray(dense.util),
+            jnp.asarray(dense.util_sum, jnp.float64),
+            jnp.asarray(dense.util_sumsq, jnp.float64),
+            jnp.asarray(acting_np), jnp.asarray(dense.pool_counts),
+            jnp.asarray(dst_ok_np),
+            jnp.asarray(_pack_rows(dense.rows_on_dev, dense.sh_size,
+                                   self._r_cap)),
+            jnp.asarray(nrows_np), jnp.asarray(order_np),
+        )
+        self._slack = jnp.asarray(cfg.count_slack, jnp.float64)
+        self._headroom = jnp.asarray(cfg.headroom, jnp.float64)
+        self._min_dvar = jnp.asarray(cfg.min_variance_delta, jnp.float64)
+        self._epoch = state.mutation_epoch
+
+    @property
+    def stale(self) -> bool:
+        return self._epoch != self.state.mutation_epoch
+
+    # -- planning ------------------------------------------------------------
+
+    def _chunk_loop(self, budget: int) -> list[tuple[int, int, int, int, float]]:
+        """Run chunks until ``budget`` raw moves are on hand (stashing any
+        overshoot), the device reports convergence, or a re-pad is needed."""
+        raw: list[tuple[int, int, int, int, float]] = []
+        take = min(len(self._stash), budget)
+        raw.extend(self._stash[:take])
+        del self._stash[:take]
+        state = self.state
+        while len(raw) < budget and not self._done:
+            t0 = time.perf_counter()
+            self._dyn, done, overflow, moves = _plan_chunk(
+                self._dyn, self._const, self._slack, self._headroom,
+                self._min_dvar, k=self._k, kb=self._kb, rb=self._rb,
+                m=self.chunk, backend=self.select_backend)
+            moves_np, done, overflow, nrows_np = _fetch(
+                (moves, done, overflow, self._dyn[8]))
+            dt = time.perf_counter() - t0
+            emitted = moves_np[moves_np[:, 0] >= 0]
+            per_s = dt / max(len(emitted), 1)
+            new = [(*m, per_s) for m in map(tuple, emitted.tolist())]
+            raw.extend(new)
+            if len(raw) >= budget:
+                # device ran past the budget: the overshoot is already
+                # applied in the carry — hold it for the next call so the
+                # emitted stream stays the cold-start sequence
+                self._stash = raw[budget:] + self._stash
+                del raw[budget:]
+                if done:
+                    self._done = True
+                break
+            if done:
+                self._done = True
+                break
+            if overflow or int(nrows_np.max()) + self.chunk > self._r_cap:
+                # re-pad the per-device row table and resume (one extra
+                # sync; triggers one recompile for the new row_capacity)
+                rows_np = _fetch(self._dyn[7])
+                self._r_cap = self._round_cap(int(nrows_np.max()) + self.chunk)
+                packed = np.full((state.n_devices, self._r_cap), -1, np.int32)
+                for d in range(state.n_devices):
+                    nd = int(nrows_np[d])
+                    packed[d, :nd] = rows_np[d, :nd]
+                self._dyn = self._dyn[:7] + (jnp.asarray(packed),) \
+                    + self._dyn[8:]
+        return raw
+
+    def plan(self, max_moves: int | None = None,
+             record_trajectory: bool = False,
+             record_free_space: bool = True):
+        """Plan up to ``max_moves`` (default ``cfg.max_moves``) further
+        moves, applying them to the bound state; returns (movements,
+        records) exactly like :func:`repro.core.equilibrium.balance`.
+
+        Reuses the device carry from the previous call when the state is
+        unchanged; rebuilds it (one counted rebuild) otherwise.
+        """
+        budget = self.cfg.max_moves if max_moves is None else max_moves
+        state = self.state
+        with enable_x64():
+            if self._epoch < 0 or self.stale:
+                self._build()
+            if self._dyn is None or budget <= 0:
+                return [], []
+            raw_moves = self._chunk_loop(budget)
+
+            # -- reconcile with the dict-based model, replaying the move log
+            dense = self._dense
+            movements: list[Movement] = []
+            records: list[MoveRecord] = []
+            for row, src, dst, tried, secs in raw_moves:
+                pg, slot = dense.shard_key[row]
+                mv = Movement(pg, slot, state.devices[src].id,
+                              state.devices[dst].id,
+                              float(dense.sh_size[row]))
+                state.apply(mv)              # re-validates source assignment
+                movements.append(mv)
+                if record_trajectory:
+                    records.append(MoveRecord(
+                        movement=mv,
+                        variance_after=state.utilization_variance(),
+                        free_space_after=(state.total_pool_free_space()
+                                          if record_free_space
+                                          else float("nan")),
+                        planning_seconds=secs,
+                        sources_tried=tried,
+                    ))
+            self._epoch = state.mutation_epoch
+        return movements, records
+
+
 def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
                   record_trajectory: bool = False,
                   record_free_space: bool = True, chunk: int = 64,
@@ -395,6 +625,10 @@ def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
     moves, so the first chunk's ``planning_seconds`` include the one-time
     jit compile (and a re-pad's recompile); steady-state timing wants a
     warmed engine — see benchmarks/bench_planner.py.
+
+    One-shot wrapper over :class:`BatchPlanner`; hold a planner instance
+    instead to plan incrementally across cluster ticks without rebuilding
+    the dense state (the scenario engine's warm-start path).
     """
     cfg = cfg or EquilibriumConfig()
     if not _HAVE_JAX:  # pragma: no cover - numpy fallback, same outputs
@@ -402,117 +636,8 @@ def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
         return balance_fast(state, cfg, record_trajectory=record_trajectory,
                             record_free_space=record_free_space,
                             engine="numpy")
-    from .equilibrium_jax import DenseState
-
-    if select_backend == "auto":
-        select_backend = ("pallas-tpu" if jax.default_backend() == "tpu"
-                          else "ref")
-    if not state.acting or not state.pools or state.n_devices < 2:
-        return [], []
-    dense = DenseState(state)
-    if not dense.shard_key:
-        return [], []
-    k = min(cfg.k, state.n_devices)
-    kb = min(max(1, source_block), k)
-    rb = max(1, row_block)
-
-    # compact acting table (n_pg, max pool size), padded with -1
-    n_slots = max(p.size for p in state.pools.values())
-    acting_np = np.full((len(dense.pgs), n_slots), -1, np.int32)
-    for pg, pgi in dense.pg_index.items():
-        osds = state.acting[pg]
-        acting_np[pgi, :len(osds)] = [state.idx(o) for o in osds]
-
-    with enable_x64():
-        const = (
-            jnp.asarray(dense.cap), jnp.asarray(dense.dev_class, jnp.int32),
-            jnp.asarray(dense.dev_domain_arr, jnp.int32),
-            jnp.asarray(dense.sh_size.astype(np.float64)),
-            jnp.asarray(dense.sh_pg, jnp.int32),
-            jnp.asarray(dense.sh_pool, jnp.int32),
-            jnp.asarray(dense.sh_class, jnp.int32),
-            jnp.asarray(dense.sh_level, jnp.int32),
-            jnp.asarray(dense.sh_slot, jnp.int32),
-            jnp.asarray(dense.sh_sbase, jnp.int32),
-            jnp.asarray(dense.sh_scnt, jnp.int32),
-            jnp.asarray(dense.ideal),
-        )
-        nrows_np = np.array([len(s) for s in dense.rows_on_dev], np.int32)
-        dst_ok_np = (np.abs(dense.pool_counts + 1.0 - dense.ideal)
-                     <= np.abs(dense.pool_counts - dense.ideal)
-                     + cfg.count_slack)
-        order_np = np.argsort(-dense.util, kind="stable").astype(np.int32)
-
-        def make_dyn(r_cap):
-            return (
-                jnp.asarray(dense.used), jnp.asarray(dense.util),
-                jnp.asarray(dense.util_sum, jnp.float64),
-                jnp.asarray(dense.util_sumsq, jnp.float64),
-                jnp.asarray(acting_np), jnp.asarray(dense.pool_counts),
-                jnp.asarray(dst_ok_np),
-                jnp.asarray(_pack_rows(dense.rows_on_dev, dense.sh_size,
-                                       r_cap)),
-                jnp.asarray(nrows_np), jnp.asarray(order_np),
-            )
-
-        def round_cap(n):
-            return max(rb, -(-int(n) // rb) * rb)
-
-        r_cap = round_cap(max(row_capacity, int(nrows_np.max()))
-                          if row_capacity is not None
-                          else int(nrows_np.max()) + chunk)
-        dyn = make_dyn(r_cap)
-        slack = jnp.asarray(cfg.count_slack, jnp.float64)
-        headroom = jnp.asarray(cfg.headroom, jnp.float64)
-        min_dvar = jnp.asarray(cfg.min_variance_delta, jnp.float64)
-
-        raw_moves: list[tuple[int, int, int, int]] = []
-        chunk_times: list[tuple[float, int]] = []
-        while len(raw_moves) < cfg.max_moves:
-            t0 = time.perf_counter()
-            dyn, done, overflow, moves = _plan_chunk(
-                dyn, const, slack, headroom, min_dvar,
-                k=k, kb=kb, rb=rb, m=chunk, backend=select_backend)
-            moves_np, done, overflow, nrows_np = _fetch(
-                (moves, done, overflow, dyn[8]))
-            dt = time.perf_counter() - t0
-            emitted = moves_np[moves_np[:, 0] >= 0]
-            raw_moves.extend(map(tuple, emitted.tolist()))
-            chunk_times.append((dt, len(emitted)))
-            if len(raw_moves) >= cfg.max_moves:
-                del raw_moves[cfg.max_moves:]   # device ran past the cap;
-                break                           # the replay below ignores it
-            if done:
-                break
-            if overflow or int(nrows_np.max()) + chunk > r_cap:
-                # re-pad the per-device row table and resume (one extra
-                # sync; triggers one recompile for the new row_capacity)
-                rows_np = _fetch(dyn[7])
-                r_cap = round_cap(int(nrows_np.max()) + chunk)
-                packed = np.full((state.n_devices, r_cap), -1, np.int32)
-                for d in range(state.n_devices):
-                    nd = int(nrows_np[d])
-                    packed[d, :nd] = rows_np[d, :nd]
-                dyn = dyn[:7] + (jnp.asarray(packed),) + dyn[8:]
-
-    # -- reconcile with the dict-based model once, replaying the move log --
-    movements: list[Movement] = []
-    records: list[MoveRecord] = []
-    per_move_s = iter([dt / max(n, 1)
-                       for dt, n in chunk_times for _ in range(n)])
-    for row, src, dst, tried in raw_moves:
-        pg, slot = dense.shard_key[row]
-        mv = Movement(pg, slot, state.devices[src].id, state.devices[dst].id,
-                      float(dense.sh_size[row]))
-        state.apply(mv)                      # re-validates source assignment
-        movements.append(mv)
-        if record_trajectory:
-            records.append(MoveRecord(
-                movement=mv,
-                variance_after=state.utilization_variance(),
-                free_space_after=(state.total_pool_free_space()
-                                  if record_free_space else float("nan")),
-                planning_seconds=next(per_move_s),
-                sources_tried=tried,
-            ))
-    return movements, records
+    planner = BatchPlanner(state, cfg, chunk=chunk, source_block=source_block,
+                           row_block=row_block, row_capacity=row_capacity,
+                           select_backend=select_backend)
+    return planner.plan(record_trajectory=record_trajectory,
+                        record_free_space=record_free_space)

@@ -78,6 +78,10 @@ class DenseState:
         classes = sorted({d.device_class for d in devs})
         self.class_id = {c: i for i, c in enumerate(classes)}
         self.dev_class = np.array([self.class_id[d.device_class] for d in devs])
+        # weighted ("in") devices; out devices are never legal destinations
+        # (mirrors move_is_legal's out_osds check, independent of the
+        # ideal-count criterion which stops excluding at count_slack >= 1)
+        self.dev_in = state.in_mask()
 
         # global domain ids per failure-domain level
         self.levels = ("osd", "host", "rack", "datacenter")
@@ -292,8 +296,18 @@ class DenseState:
         old_var = self.util_sumsq / n_f - (self.util_sum / n_f) ** 2
         var_ok = (new_var - old_var) < -cfg.min_variance_delta
 
+        # the faithful loop scans destinations emptiest-first and stops at
+        # the source's own rank: only strictly-emptier devices (ties by
+        # lower index, the stable-argsort order) are ever considered —
+        # with heterogeneous capacities a fuller destination can still
+        # pass the variance test, so this cutoff must be explicit
+        u_src = u[src_idx]
+        before_src = (u < u_src) | ((u == u_src)
+                                    & (np.arange(n) < src_idx))
+
         valid = (class_ok & not_member & dom_ok & cap_ok & dst_ok & var_ok
-                 & src_ok[:, None])
+                 & src_ok[:, None] & self.dev_in[None, :]
+                 & before_src[None, :])
         valid[:, src_idx] = False
         return valid
 
@@ -450,7 +464,14 @@ def _pick_jax(dense: DenseState, rows: np.ndarray, src_idx: int,
 
     sizes = padded(dense.sh_size[rows].astype(np.float64), -1.0)
     cls = padded(dense.sh_class[rows], 0)
-    member = padded(dense.member[dense.sh_pg[rows]], True)
+    # out devices and destinations at/after the source's utilization rank
+    # are folded into the membership mask (each excludes a destination),
+    # keeping the jitted kernel's signature stable
+    u_src = dense.util[src_idx]
+    before_src = (dense.util < u_src) | ((dense.util == u_src)
+                                         & (np.arange(n) < src_idx))
+    member = padded(dense.member[dense.sh_pg[rows]]
+                    | ~dense.dev_in[None, :] | ~before_src[None, :], True)
     # peer occupancy with the shard's own source domain already subtracted
     # (levels differ per row, so folding it here is simpler than in-kernel).
     peer = padded(dense.peer_occupancy(rows, src_idx)[0])

@@ -20,11 +20,12 @@ sources' documented behavior:
 
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass
 
 import numpy as np
 
-from .cluster import ClusterState, Movement
+from .cluster import ClusterState, Movement, PGId
 
 
 @dataclass
@@ -34,11 +35,61 @@ class MgrBalancerConfig:
     headroom: float = 0.0
 
 
-def _pool_round(state: ClusterState, pool_id: int,
-                cfg: MgrBalancerConfig) -> Movement | None:
+class _PoolShardIndex:
+    """Maintained per-(pool, device) sorted shard lists + cached ideal
+    counts.
+
+    The naive ``_pool_round`` re-sorted the source device's whole
+    ``shards_on`` registry (every pool's shards) and recomputed the pool's
+    ideal vector on *every attempted move*; at cluster-B scale the sort
+    alone dominated baseline runs.  Both are loop-invariant per pool:
+    ideal counts don't change while balancing (capacities are fixed), and
+    the per-pool shard lists change by exactly one remove + one insert per
+    applied move.  Scan order is identical to ``sorted(...)`` — ascending
+    (pg, slot) — so the move sequence is unchanged (regression-tested in
+    tests/test_balancers.py).
+    """
+
+    def __init__(self, state: ClusterState):
+        self.state = state
+        self._ideal: dict[int, np.ndarray] = {}
+        self._shards: dict[int, dict[int, list[tuple[PGId, int]]]] = {}
+
+    def ideal(self, pool_id: int) -> np.ndarray:
+        if pool_id not in self._ideal:
+            self._ideal[pool_id] = self.state.ideal_shard_count(
+                self.state.pools[pool_id])
+        return self._ideal[pool_id]
+
+    def _pool_lists(self, pool_id: int) -> dict[int, list[tuple[PGId, int]]]:
+        by_dev = self._shards.get(pool_id)
+        if by_dev is None:
+            by_dev = {}
+            for pg in self.state.pgs_of_pool[pool_id]:
+                for slot, osd in enumerate(self.state.acting[pg]):
+                    by_dev.setdefault(osd, []).append((pg, slot))
+            for lst in by_dev.values():
+                lst.sort()
+            self._shards[pool_id] = by_dev
+        return by_dev
+
+    def shards(self, pool_id: int, osd: int) -> list[tuple[PGId, int]]:
+        return self._pool_lists(pool_id).get(osd, [])
+
+    def apply(self, mv: Movement) -> None:
+        by_dev = self._pool_lists(mv.pg[0])
+        src = by_dev.get(mv.src_osd, [])
+        i = bisect.bisect_left(src, (mv.pg, mv.slot))
+        if i < len(src) and src[i] == (mv.pg, mv.slot):
+            del src[i]
+        bisect.insort(by_dev.setdefault(mv.dst_osd, []), (mv.pg, mv.slot))
+
+
+def _pool_round(state: ClusterState, pool_id: int, cfg: MgrBalancerConfig,
+                index: _PoolShardIndex | None = None) -> Movement | None:
     """One attempted move for one pool; None if the pool aborts."""
-    pool = state.pools[pool_id]
-    ideal = state.ideal_shard_count(pool)
+    index = index or _PoolShardIndex(state)
+    ideal = index.ideal(pool_id)
     counts = state.pool_counts[pool_id].astype(np.float64)
     deviation = counts - ideal
     src_idx = int(np.argmax(deviation))
@@ -48,10 +99,9 @@ def _pool_round(state: ClusterState, pool_id: int,
 
     # destinations: lowest deviation first (size-blind)
     order = np.argsort(deviation, kind="stable")
-    # shards of this pool on the source, in arbitrary (slot) order — the
-    # mgr balancer does not consider shard size.
-    shards = sorted((pg, slot) for (pg, slot) in state.shards_on[src_osd]
-                    if pg[0] == pool_id)
+    # shards of this pool on the source, ascending (pg, slot) — the mgr
+    # balancer does not consider shard size.
+    shards = index.shards(pool_id, src_osd)
     for di in order:
         dst_osd = state.devices[int(di)].id
         if dst_osd == src_osd:
@@ -78,15 +128,17 @@ def balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
     cfg = cfg or MgrBalancerConfig()
     movements: list[Movement] = []
     trajectory: list[dict] = []
+    index = _PoolShardIndex(state)
     active = set(state.pools.keys())
     while active and len(movements) < cfg.max_moves:
         progressed = False
         for pool_id in sorted(active):
-            mv = _pool_round(state, pool_id, cfg)
+            mv = _pool_round(state, pool_id, cfg, index)
             if mv is None:
                 active.discard(pool_id)
                 continue
             state.apply(mv)
+            index.apply(mv)
             movements.append(mv)
             progressed = True
             if record_trajectory:

@@ -8,15 +8,25 @@ what the paper's Table 1 and Figures 4–6 report:
 * total moved bytes,
 * utilization variance trajectory (cluster-wide and per device class),
 * per-pool free-space trajectories.
+
+It also provides the **movement throttle** (:class:`MovementThrottle`):
+in a real cluster an upmap lands in the osdmap instantly but the data
+lands over time, gated by ``osd_max_backfills`` and per-device recovery
+bandwidth.  The throttle tracks that gap — the *target* map (what the
+balancers plan against) versus *physical* occupancy (what utilization
+metrics should measure) — and is the transport model of the scenario
+engine (:mod:`repro.sim.engine`).  :func:`simulate_throttled` replays one
+precomputed move list under it.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .cluster import ClusterState, Movement
+from .cluster import ClusterState, GiB, Movement
 
 
 @dataclass
@@ -83,6 +93,213 @@ def simulate(initial: ClusterState, movements: list[Movement],
         variance_trajectory=np.array(var_traj) if record_trajectory else None,
         free_trajectory=np.array(free_traj) if record_trajectory else None,
         moved_bytes_trajectory=np.array(moved_traj) if record_trajectory else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Movement throttle: target map vs physical occupancy
+
+
+@dataclass
+class ThrottleConfig:
+    """Backfill limits, mirroring Ceph's recovery knobs.
+
+    ``max_concurrent`` caps cluster-wide in-flight backfills
+    (osd_max_backfills aggregated); ``device_bytes_per_tick`` is each
+    device's recovery bandwidth per simulation tick, shared by every
+    transfer reading from or writing to it.
+    """
+
+    max_concurrent: int = 8
+    device_bytes_per_tick: float = 512 * GiB
+
+
+@dataclass
+class _Transfer:
+    mv: Movement
+    remaining: float
+    # False once the source's copy is gone (failure recovery: the data is
+    # re-read from surviving peers, so the source consumes no bandwidth
+    # and holds no physical bytes).
+    src_holds: bool = True
+    # Physical holder of the shard's bytes.  Usually mv.src_osd, but when
+    # an upmap is re-targeted mid-backfill (shard moved A→B, then B→C
+    # while A→B was still transferring) the superseding transfer keeps
+    # reading from the *original* holder A — the intermediate destination
+    # never completed and holds nothing.
+    holder: int = -1
+
+    def __post_init__(self):
+        if self.holder < 0:
+            self.holder = self.mv.src_osd
+
+
+class MovementThrottle:
+    """FIFO backfill queue: admits up to ``max_concurrent`` transfers,
+    progresses each by the per-device bandwidth it can claim, and accounts
+    for the target-vs-physical occupancy gap."""
+
+    def __init__(self, cfg: ThrottleConfig | None = None):
+        self.cfg = cfg or ThrottleConfig()
+        self.pending: deque[_Transfer] = deque()
+        self.in_flight: list[_Transfer] = []
+        self.transferred_bytes = 0.0
+        self.completed_moves = 0
+        self.cancelled_moves = 0
+
+    # -- queue management ---------------------------------------------------
+
+    def enqueue(self, movements: list[Movement], src_holds: bool = True) -> None:
+        for mv in movements:
+            holder, holds = mv.src_osd, src_holds
+            old = self._find_shard(mv.pg, mv.slot)
+            if old is not None:
+                # upmap re-targeted mid-backfill: the superseded transfer's
+                # destination never completed, so the new one re-reads the
+                # full shard from the original physical holder and the
+                # partially transferred bytes are discarded
+                self._remove(old)
+                self.cancelled_moves += 1
+                holder, holds = old.holder, old.src_holds
+            self.pending.append(_Transfer(mv, float(mv.size), holds, holder))
+
+    def _find_shard(self, pg, slot) -> _Transfer | None:
+        for t in self.in_flight:
+            if t.mv.pg == pg and t.mv.slot == slot:
+                return t
+        for t in self.pending:
+            if t.mv.pg == pg and t.mv.slot == slot:
+                return t
+        return None
+
+    def _remove(self, tr: _Transfer) -> None:
+        if tr in self.in_flight:
+            self.in_flight.remove(tr)
+        else:
+            self.pending.remove(tr)
+
+    def cancel_to(self, osd_id: int) -> int:
+        """Drop transfers destined for a device that just died; the shard's
+        new recovery move supersedes them.  Partially transferred bytes
+        stay counted (they were moved, then lost)."""
+        n0 = len(self.pending) + len(self.in_flight)
+        self.pending = deque(t for t in self.pending
+                             if t.mv.dst_osd != osd_id)
+        self.in_flight = [t for t in self.in_flight if t.mv.dst_osd != osd_id]
+        dropped = n0 - len(self.pending) - len(self.in_flight)
+        self.cancelled_moves += dropped
+        return dropped
+
+    def source_lost(self, osd_id: int) -> None:
+        """The holding device's data is gone (failure): in-progress reads
+        fall back to surviving peers."""
+        for t in self.pending:
+            if t.holder == osd_id:
+                t.src_holds = False
+        for t in self.in_flight:
+            if t.holder == osd_id:
+                t.src_holds = False
+
+    @property
+    def backlog_moves(self) -> int:
+        return len(self.pending) + len(self.in_flight)
+
+    @property
+    def backlog_bytes(self) -> float:
+        return (sum(t.remaining for t in self.pending)
+                + sum(t.remaining for t in self.in_flight))
+
+    # -- simulation ---------------------------------------------------------
+
+    def tick(self) -> float:
+        """Advance one tick; returns bytes transferred this tick."""
+        while (self.pending
+               and len(self.in_flight) < self.cfg.max_concurrent):
+            self.in_flight.append(self.pending.popleft())
+        budget: dict[int, float] = {}
+        bw = self.cfg.device_bytes_per_tick
+
+        def take(osd: int, want: float) -> float:
+            left = budget.setdefault(osd, bw)
+            got = min(left, want)
+            budget[osd] = left - got
+            return got
+
+        moved = 0.0
+        still: list[_Transfer] = []
+        for t in self.in_flight:
+            want = min(t.remaining, budget.get(t.mv.dst_osd, bw))
+            if t.src_holds:
+                want = min(want, budget.get(t.holder, bw))
+            if want > 0.0:
+                got = take(t.mv.dst_osd, want)
+                if t.src_holds:
+                    got = take(t.holder, got)
+                t.remaining -= got
+                moved += got
+            if t.remaining <= 1e-6:
+                self.completed_moves += 1
+            else:
+                still.append(t)
+        self.in_flight = still
+        self.transferred_bytes += moved
+        return moved
+
+    # -- accounting ---------------------------------------------------------
+
+    def physical_used(self, state: ClusterState) -> np.ndarray:
+        """Per-device *physical* bytes: the state's target occupancy plus
+        corrections for data not yet transferred (source still holds its
+        copy; destination only holds what has arrived)."""
+        used = state.used()
+        for t in list(self.pending) + self.in_flight:
+            if t.src_holds and t.holder in state.dev_by_id:
+                used[state.idx(t.holder)] += t.mv.size
+            used[state.idx(t.mv.dst_osd)] -= t.remaining
+        return used
+
+
+@dataclass
+class ThrottledReplayResult:
+    ticks: int
+    moved_bytes: float
+    variance_target: float
+    # per-tick physical series (index 0 = before any transfer lands)
+    variance_trajectory: np.ndarray
+    transferred_trajectory: np.ndarray
+    in_flight_trajectory: np.ndarray
+
+
+def simulate_throttled(initial: ClusterState, movements: list[Movement],
+                       throttle: ThrottleConfig | None = None,
+                       max_ticks: int = 100_000) -> ThrottledReplayResult:
+    """Replay a move list the way a cluster executes it: every upmap lands
+    in the target map at tick 0, the data drains through the throttle.
+    Physical utilization variance converges to the target variance only
+    once the backlog empties — the gap is the movement cost over time."""
+    state = initial.copy()
+    q = MovementThrottle(throttle)
+    for mv in movements:
+        state.apply(mv)
+    q.enqueue(movements)
+    cap = state.capacity_vector()
+    var_traj = [float(np.var(q.physical_used(state) / cap))]
+    moved_traj = [0.0]
+    inflight_traj = [0]
+    ticks = 0
+    while q.backlog_moves and ticks < max_ticks:
+        q.tick()
+        ticks += 1
+        var_traj.append(float(np.var(q.physical_used(state) / cap)))
+        moved_traj.append(q.transferred_bytes)
+        inflight_traj.append(len(q.in_flight))
+    return ThrottledReplayResult(
+        ticks=ticks,
+        moved_bytes=q.transferred_bytes,
+        variance_target=state.utilization_variance(),
+        variance_trajectory=np.array(var_traj),
+        transferred_trajectory=np.array(moved_traj),
+        in_flight_trajectory=np.array(inflight_traj),
     )
 
 

@@ -35,6 +35,13 @@ def batch_axes(mesh: Mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+def _ax(axes: tuple):
+    """Collapse a singleton axis tuple to its bare name: ``P(("data",))``
+    and ``P("data")`` shard identically, but compare (and print) unequal —
+    specs must be canonical so tests and spec-diffs are exact."""
+    return axes[0] if isinstance(axes, tuple) and len(axes) == 1 else axes
+
+
 # -- parameter specs ---------------------------------------------------------
 
 _LEAF_RULES = {
@@ -132,9 +139,9 @@ def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_tree: dict) -> dict:
     for name, leaf in batch_tree.items():
         ndim = len(leaf.shape)
         if name == "positions":                   # (3, B, S)
-            out[name] = P(None, baxes, *([None] * (ndim - 2)))
+            out[name] = P(None, _ax(baxes), *([None] * (ndim - 2)))
         else:                                     # (B, ...)
-            out[name] = P(baxes, *([None] * (ndim - 1)))
+            out[name] = P(_ax(baxes), *([None] * (ndim - 1)))
     return out
 
 
@@ -160,16 +167,16 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_tree: dict,
             head_ax = "model" if heads_divide else None
             if shard_batch:
                 s_ax = None if heads_divide else "model"
-                return P(None, baxes, s_ax, head_ax, None)
+                return P(None, _ax(baxes), s_ax, head_ax, None)
             s_axes = baxes if heads_divide else (*baxes, "model")
-            return P(None, None, s_axes, head_ax, None)
+            return P(None, None, _ax(s_axes), head_ax, None)
         if name == "ssd":                          # (L,B,H,P,N)
             head_ax = "model" if shp[2] % mp == 0 else None
-            b_ax = baxes if shard_batch else None
+            b_ax = _ax(baxes) if shard_batch else None
             return P(None, b_ax, head_ax, None, None)
         if name == "conv":                         # (L,B,K-1,C)
             c_ax = "model" if shp[3] % mp == 0 else None
-            b_ax = baxes if shard_batch else None
+            b_ax = _ax(baxes) if shard_batch else None
             return P(None, b_ax, None, c_ax)
         raise KeyError(name)
 

@@ -1,0 +1,20 @@
+"""Scenario engine: event-driven cluster lifecycle simulation.
+
+The paper's evaluation is a set of frozen snapshots; this package makes
+the cluster move — growth, expansion, failures, throttled backfill — and
+ticks any registered balancer against the moving target.  See
+``benchmarks/bench_scenarios.py`` for the head-to-head harness.
+"""
+
+from .engine import BALANCERS, ScenarioEngine, SimConfig
+from .events import (DeviceAdd, DeviceFail, DeviceOut, Event, HostAdd,
+                     PoolCreate, PoolGrowth, RebalanceTick)
+from .metrics import MetricsCollector
+from .scenarios import SCENARIOS, Scenario, register, run_scenario
+
+__all__ = [
+    "BALANCERS", "ScenarioEngine", "SimConfig", "Event", "PoolGrowth",
+    "PoolCreate", "DeviceAdd", "HostAdd", "DeviceOut", "DeviceFail",
+    "RebalanceTick", "MetricsCollector", "SCENARIOS", "Scenario",
+    "register", "run_scenario",
+]

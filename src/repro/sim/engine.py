@@ -1,0 +1,267 @@
+"""Event-driven cluster lifecycle simulator.
+
+The paper's harness (:mod:`repro.core.simulate`) replays one precomputed
+move list against one frozen snapshot.  This engine advances a live
+:class:`~repro.core.cluster.ClusterState` through a timeline of lifecycle
+events — ingest, expansion, failures, rebalance ticks — under the
+movement throttle, so the three planner engines can be compared over a
+cluster's *lifetime* rather than at a single instant.
+
+Semantics mirror how Ceph actually executes placement changes:
+
+* Balancer plans and CRUSH re-placements land in the **target map**
+  immediately (the upmap/osdmap view every planner plans against — this
+  is why planning against the mutated state mid-backfill is faithful).
+* Data lands later: every placement change is a transfer in the
+  :class:`~repro.core.simulate.MovementThrottle` (max concurrent
+  backfills + per-device recovery bandwidth), and all utilization metrics
+  are sampled from **physical** occupancy.
+* The ``equilibrium_batch`` balancer holds a
+  :class:`~repro.core.equilibrium_batch.BatchPlanner` across ticks: on
+  quiet ticks (no event mutated the state) it resumes planning from its
+  device-resident carry instead of rebuilding — the warm-start path.
+
+Determinism: one seeded generator drives every random draw (re-placement
+destinations, CRUSH subset selection, new-pool jitter) in a fixed order,
+so a scenario + seed reproduces byte-identical metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.cluster import ClusterState, Device, Movement, PlacementRule, Pool
+from ..core.crush import place_pg
+from ..core.equilibrium import EquilibriumConfig
+from ..core.mgr_balancer import MgrBalancerConfig, balance as mgr_balance
+from ..core.simulate import MovementThrottle, ThrottleConfig
+from .events import (DeviceAdd, DeviceFail, DeviceOut, Event, HostAdd,
+                     PoolCreate, PoolGrowth, RebalanceTick)
+from .metrics import MetricsCollector
+
+#: Registered balancers a scenario can tick.
+BALANCERS = ("equilibrium", "equilibrium_batch", "mgr", "none")
+
+
+@dataclass
+class SimConfig:
+    ticks: int = 50
+    balancer: str = "equilibrium_batch"
+    throttle: ThrottleConfig = field(default_factory=ThrottleConfig)
+    #: default per-RebalanceTick planning budget (RebalanceTick.max_moves
+    #: overrides when >= 0)
+    moves_per_tick: int = 48
+    #: skip RebalanceTicks while the transfer backlog is at least this
+    #: deep (None = always plan) — planning into a saturated queue only
+    #: front-loads movement
+    backlog_cap: int | None = None
+    fullness_threshold: float = 0.85
+    seed: int = 0
+    equilibrium: EquilibriumConfig = field(default_factory=EquilibriumConfig)
+    mgr: MgrBalancerConfig = field(default_factory=MgrBalancerConfig)
+
+
+class ScenarioEngine:
+    """Run one timeline against one cluster with one balancer."""
+
+    def __init__(self, state: ClusterState, events: list[Event],
+                 cfg: SimConfig | None = None):
+        self.cfg = cfg or SimConfig()
+        if self.cfg.balancer not in BALANCERS:
+            raise ValueError(f"unknown balancer {self.cfg.balancer!r}: "
+                             f"expected one of {BALANCERS}")
+        self.state = state
+        self.growth = [ev for ev in events if isinstance(ev, PoolGrowth)]
+        self.timeline: dict[int, list[Event]] = {}
+        for ev in events:
+            if not isinstance(ev, PoolGrowth):
+                self.timeline.setdefault(ev.tick, []).append(ev)
+        self.throttle = MovementThrottle(self.cfg.throttle)
+        self.metrics = MetricsCollector(self.cfg.fullness_threshold)
+        self.rng = np.random.default_rng((self.cfg.seed, 0x51D3))
+        self._planner = None                # warm BatchPlanner across ticks
+        self._planned_moves = 0
+        self._degraded = 0
+        self._next_osd = 1 + max((d.id for d in state.devices), default=-1)
+        self._expansions = 0
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self) -> MetricsCollector:
+        for t in range(self.cfg.ticks):
+            for g in self.growth:
+                if g.applies_at(t):
+                    self.state.grow_pool(g.pool_id, g.bytes_per_tick)
+                    if t == g.tick:
+                        self.metrics.log_event(t, self._describe(g))
+            for ev in self.timeline.get(t, ()):
+                self._apply(t, ev)
+            self.throttle.tick()
+            self.metrics.collect(t, self.state, self.throttle,
+                                 self._planned_moves, self._degraded)
+        return self.metrics
+
+    # -- event application ---------------------------------------------------
+
+    def _apply(self, t: int, ev: Event) -> None:
+        if isinstance(ev, RebalanceTick):
+            self._rebalance(t, ev)
+            return
+        self.metrics.log_event(t, self._describe(ev))
+        if isinstance(ev, DeviceAdd):
+            host = ev.host or f"{ev.device_class}-exp{self._expansions:03d}"
+            self._expansions += 1
+            dev = Device(id=self._next_osd, capacity=float(ev.capacity),
+                         device_class=ev.device_class, host=host,
+                         rack=ev.rack or "rack0")
+            self._next_osd += 1
+            self.state.add_device(dev)
+            self._expand_onto([dev])
+        elif isinstance(ev, HostAdd):
+            host = ev.host or f"{ev.device_class}-exp{self._expansions:03d}"
+            rack = ev.rack or f"{ev.device_class}-exprack"
+            self._expansions += 1
+            devs = []
+            for _ in range(ev.n_osds):
+                dev = Device(id=self._next_osd,
+                             capacity=float(ev.capacity_each),
+                             device_class=ev.device_class, host=host,
+                             rack=rack)
+                self._next_osd += 1
+                self.state.add_device(dev)
+                devs.append(dev)
+            self._expand_onto(devs)
+        elif isinstance(ev, DeviceOut):
+            self._drain(ev.osd_id, lost=False)
+        elif isinstance(ev, DeviceFail):
+            # in-flight transfers into the dead device are superseded by
+            # the recovery moves; reads from it fall back to peers
+            self.throttle.cancel_to(ev.osd_id)
+            self.throttle.source_lost(ev.osd_id)
+            self._drain(ev.osd_id, lost=True)
+        elif isinstance(ev, PoolCreate):
+            self._create_pool(ev)
+        else:
+            raise TypeError(f"unhandled event {ev!r}")
+
+    @staticmethod
+    def _describe(ev: Event) -> str:
+        return f"{type(ev).__name__}({dataclasses.asdict(ev)})"
+
+    # -- balancing -----------------------------------------------------------
+
+    def _rebalance(self, t: int, ev: RebalanceTick) -> None:
+        cap = self.cfg.backlog_cap
+        if cap is not None and self.throttle.backlog_moves >= cap:
+            return
+        budget = ev.max_moves if ev.max_moves >= 0 else self.cfg.moves_per_tick
+        name = self.cfg.balancer
+        if name == "none" or budget <= 0:
+            return
+        from ..core.equilibrium_batch import _HAVE_JAX
+        if name == "equilibrium_batch" and not _HAVE_JAX:
+            name = "equilibrium"    # pragma: no cover - numpy fallback,
+        if name == "mgr":           # same move sequences
+            mcfg = dataclasses.replace(self.cfg.mgr, max_moves=budget)
+            moves, _ = mgr_balance(self.state, mcfg)
+        elif name == "equilibrium":
+            from ..core.equilibrium_jax import balance_fast
+            ecfg = dataclasses.replace(self.cfg.equilibrium, max_moves=budget)
+            moves, _ = balance_fast(self.state, ecfg, engine="numpy")
+        else:                                # equilibrium_batch, warm-started
+            if self._planner is None:
+                from ..core.equilibrium_batch import BatchPlanner
+                self._planner = BatchPlanner(self.state, self.cfg.equilibrium)
+            moves, _ = self._planner.plan(max_moves=budget)
+        self._planned_moves += len(moves)
+        self.throttle.enqueue(moves)
+
+    # -- placement surgery ---------------------------------------------------
+
+    def _pick_destination(self, pg, slot) -> int | None:
+        """Seeded capacity-weighted draw among devices the CRUSH rule
+        accepts — the stand-in for CRUSH's re-placement after a topology
+        change."""
+        cands = [d for d in self.state.devices
+                 if self.state.move_is_legal(pg, slot, d.id)]
+        if not cands:
+            return None
+        weights = np.array([d.capacity for d in cands], dtype=np.float64)
+        weights /= weights.sum()
+        return cands[int(self.rng.choice(len(cands), p=weights))].id
+
+    def _drain(self, osd_id: int, lost: bool) -> None:
+        """Re-place every shard off a failed/out device; transfers go
+        through the throttle (recovery reads from peers when the source's
+        copy is lost)."""
+        self.state.mark_out(osd_id)
+        moves: list[Movement] = []
+        for (pg, slot) in sorted(self.state.shards_on[osd_id]):
+            dst = self._pick_destination(pg, slot)
+            if dst is None:
+                self._degraded += 1
+                continue
+            mv = Movement(pg, slot, osd_id, dst, self.state.shard_sizes[pg])
+            self.state.apply(mv)
+            moves.append(mv)
+        self.throttle.enqueue(moves, src_holds=not lost)
+
+    def _expand_onto(self, new_devs: list[Device]) -> None:
+        """CRUSH re-placement after expansion: each new device receives
+        its capacity-weighted ideal share of every pool's shards, the
+        subset drawn pseudo-randomly — added capacity attracts data in
+        proportion, which is exactly ASURA/CRUSH's movement lower bound
+        for a weighted join."""
+        moves: list[Movement] = []
+        taken: set[tuple] = set()
+        for pid in sorted(self.state.pools):
+            pool = self.state.pools[pid]
+            ideal = self.state.ideal_shard_count(pool)
+            pool_shards = [(pg, slot)
+                           for pg in self.state.pgs_of_pool[pid]
+                           for slot in range(pool.size)]
+            if not pool_shards:
+                continue
+            for dev in new_devs:
+                want = int(round(ideal[self.state.idx(dev.id)]))
+                if want <= 0:
+                    continue
+                placed = 0
+                for j in self.rng.permutation(len(pool_shards)):
+                    key = pool_shards[int(j)]
+                    if key in taken:
+                        continue
+                    pg, slot = key
+                    if not self.state.move_is_legal(pg, slot, dev.id):
+                        continue
+                    src = self.state.acting[pg][slot]
+                    mv = Movement(pg, slot, src, dev.id,
+                                  self.state.shard_sizes[pg])
+                    self.state.apply(mv)
+                    moves.append(mv)
+                    taken.add(key)
+                    placed += 1
+                    if placed >= want:
+                        break
+        self.throttle.enqueue(moves)
+
+    def _create_pool(self, ev: PoolCreate) -> None:
+        pid = ev.pool_id if ev.pool_id >= 0 else 1 + max(self.state.pools,
+                                                         default=-1)
+        rule = ev.rule or PlacementRule.replicated(3, "host")
+        pool = Pool(pid, ev.name, ev.pg_count, rule, ec_k=ev.ec_k,
+                    stored_bytes=float(ev.stored_bytes),
+                    is_user_data=ev.is_user_data)
+        devices = [d for d in self.state.devices
+                   if d.id not in self.state.out_osds]
+        acting, sizes = {}, {}
+        nominal = pool.nominal_shard_size
+        for pg in range(pool.pg_count):
+            pgid = (pid, pg)
+            acting[pgid] = place_pg(devices, pool, pg, seed=self.cfg.seed)
+            jitter = float(self.rng.normal(1.0, 0.05)) if nominal > 0 else 0.0
+            sizes[pgid] = max(nominal * max(jitter, 0.1), 0.0)
+        self.state.add_pool(pool, acting, sizes)

@@ -172,3 +172,101 @@ def test_batch_empty_and_degenerate_clusters():
     devs = [Device(id=0, capacity=8 * TiB, device_class="hdd", host="h0")]
     st = ClusterState(devs, [], {}, {})
     assert balance_batch(st, EquilibriumConfig()) == ([], [])
+
+
+# ---------------------------------------------------------------------------
+# warm start: BatchPlanner reuses the device carry across plan() calls
+
+
+def test_warm_start_no_rebuild_and_bit_identical():
+    """Budget-split warm planning must emit the cold-start sequence with a
+    single dense-state build."""
+    from repro.core.equilibrium_batch import BatchPlanner, dense_rebuild_count
+
+    init = small_test_cluster()
+    cold, _ = balance_batch(init.copy(), EquilibriumConfig())
+    assert cold
+
+    state = init.copy()
+    planner = BatchPlanner(state, EquilibriumConfig())
+    before = dense_rebuild_count()
+    seq = []
+    for budget in (3, 5, 10_000):
+        moves, _ = planner.plan(max_moves=budget)
+        seq += moves
+    assert as_tuples(seq) == as_tuples(cold)
+    assert dense_rebuild_count() - before == 1
+
+
+def test_warm_start_small_chunks_stash_across_budgets():
+    """Budgets that don't align with the chunk size exercise the stash:
+    moves the device planned past the budget are emitted by later calls,
+    still bit-identical to cold start."""
+    from repro.core.equilibrium_batch import BatchPlanner, dense_rebuild_count
+
+    init = small_test_cluster()
+    cold, _ = balance_batch(init.copy(), EquilibriumConfig())
+
+    state = init.copy()
+    planner = BatchPlanner(state, EquilibriumConfig(), chunk=4)
+    before = dense_rebuild_count()
+    seq = []
+    while True:
+        moves, _ = planner.plan(max_moves=3)
+        if not moves:
+            break
+        seq += moves
+    assert as_tuples(seq) == as_tuples(cold)
+    assert dense_rebuild_count() - before == 1
+
+
+def test_warm_start_converged_tick_is_noop():
+    """Two consecutive rebalance ticks on an unchanged cluster: the second
+    must neither rebuild nor emit moves — matching a cold-start planner on
+    the same (already converged) state."""
+    from repro.core.equilibrium_batch import BatchPlanner, dense_rebuild_count
+
+    state = small_test_cluster()
+    planner = BatchPlanner(state, EquilibriumConfig())
+    before = dense_rebuild_count()
+    first, _ = planner.plan()
+    assert first
+    second, _ = planner.plan()
+    assert second == []
+    assert dense_rebuild_count() - before == 1
+    cold_again, _ = balance_batch(state.copy(), EquilibriumConfig())
+    assert cold_again == []
+
+
+def test_warm_start_rebuilds_after_external_mutation():
+    """An external mutation (pool growth) between ticks must invalidate the
+    carry: exactly one extra rebuild, and the continuation equals a cold
+    plan from the mutated state."""
+    from repro.core.equilibrium_batch import BatchPlanner, dense_rebuild_count
+
+    state = small_test_cluster()
+    planner = BatchPlanner(state, EquilibriumConfig())
+    planner.plan(max_moves=5)
+    state.grow_pool(0, 2.0 * 1024.0 ** 4)
+    cold, _ = balance_batch(state.copy(), EquilibriumConfig())
+    before = dense_rebuild_count()
+    warm, _ = planner.plan()
+    assert as_tuples(warm) == as_tuples(cold)
+    assert dense_rebuild_count() - before == 1
+
+
+def test_out_device_never_a_destination_even_with_count_slack():
+    """count_slack >= 1 disables the ideal-count exclusion of empty
+    devices, so out devices must be masked explicitly — in every engine,
+    identically to the faithful planner's move_is_legal check."""
+    init = small_test_cluster()
+    init.mark_out(init.devices[1].id)
+    out = init.devices[1].id
+    cfg = EquilibriumConfig(count_slack=1.0)
+    faithful, _ = equilibrium_balance(init.copy(), cfg)
+    for engine in ("numpy", "jax-legacy"):
+        moves, _ = balance_fast(init.copy(), cfg, engine=engine)
+        assert as_tuples(moves) == as_tuples(faithful), engine
+    batch, _ = balance_batch(init.copy(), cfg)
+    assert as_tuples(batch) == as_tuples(faithful)
+    assert all(m.dst_osd != out for m in faithful)

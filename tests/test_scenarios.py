@@ -1,0 +1,75 @@
+"""Scenario registry behaviour: every scenario runs end-to-end and leaves
+a valid cluster; the acceptance comparison (Equilibrium strictly better
+than mgr on steady-growth/flash-expansion) holds at quick scale; and the
+deterministic-replay guard — same scenario + seed ⇒ byte-identical
+metrics JSON."""
+
+import json
+
+import pytest
+
+from repro.sim import SCENARIOS, ScenarioEngine, run_scenario
+
+
+def test_registry_has_required_scenarios():
+    required = {"steady-growth", "flash-expansion", "cascading-failures",
+                "mixed-class-upgrade", "near-full-emergency", "churn-heavy"}
+    assert required <= set(SCENARIOS)
+    assert len(SCENARIOS) >= 6
+    for s in SCENARIOS.values():
+        assert s.description
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_runs_and_stays_valid(name):
+    state, events, cfg = SCENARIOS[name].build(0, True)
+    cfg.balancer = "none"
+    engine = ScenarioEngine(state, events, cfg)
+    metrics = engine.run()
+    assert len(metrics.ticks) == cfg.ticks
+    assert len(metrics.variance) == cfg.ticks
+    # pools created mid-scenario have right-aligned, shorter series
+    assert all(0 < len(series) <= cfg.ticks
+               for series in metrics.pool_max_avail.values())
+    assert all(len(metrics.pool_max_avail[pid]) == cfg.ticks
+               for pid in (0, 1, 2))      # pools present from tick 0
+    engine.state.check_valid()
+    # transferred bytes are cumulative and monotone
+    tb = metrics.transferred_bytes
+    assert all(a <= b for a, b in zip(tb, tb[1:]))
+
+
+@pytest.mark.parametrize("balancer", ["mgr", "equilibrium_batch"])
+def test_deterministic_replay_guard(balancer):
+    """Same scenario + seed must reproduce byte-identical metrics JSON."""
+    a = run_scenario("steady-growth", balancer, seed=3, quick=True)
+    b = run_scenario("steady-growth", balancer, seed=3, quick=True)
+    ja = json.dumps(a["metrics"], sort_keys=True)
+    jb = json.dumps(b["metrics"], sort_keys=True)
+    assert ja == jb
+
+
+def test_different_seed_changes_run():
+    a = run_scenario("steady-growth", "mgr", seed=0, quick=True)
+    b = run_scenario("steady-growth", "mgr", seed=1, quick=True)
+    assert json.dumps(a["metrics"], sort_keys=True) != \
+        json.dumps(b["metrics"], sort_keys=True)
+
+
+@pytest.mark.parametrize("name", ["steady-growth", "flash-expansion"])
+def test_equilibrium_beats_mgr(name):
+    """The headline lifecycle claim, at quick scale: Equilibrium ends with
+    strictly lower utilization variance *and* strictly fewer moved bytes
+    than the size-blind mgr baseline."""
+    mgr = run_scenario(name, "mgr", quick=True)["metrics"]["summary"]
+    eq = run_scenario(name, "equilibrium_batch",
+                      quick=True)["metrics"]["summary"]
+    assert eq["final_variance"] < mgr["final_variance"]
+    assert eq["total_transferred_bytes"] < mgr["total_transferred_bytes"]
+
+
+def test_rebalance_improves_on_none():
+    none = run_scenario("steady-growth", "none", quick=True)
+    eq = run_scenario("steady-growth", "equilibrium_batch", quick=True)
+    assert eq["metrics"]["summary"]["final_variance"] < \
+        none["metrics"]["summary"]["final_variance"]

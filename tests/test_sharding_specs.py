@@ -35,9 +35,9 @@ def test_param_specs_match_tree(arch):
     cfg = get_config(arch)
     params = abstract_params(cfg)
     specs = param_specs(cfg, MESH)
-    flat_p = jax.tree.flatten_with_path(params)[0]
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
     flat_s = {tuple(str(k) for k in path): s for path, s in
-              jax.tree.flatten_with_path(
+              jax.tree_util.tree_flatten_with_path(
                   specs, is_leaf=lambda x: isinstance(x, P))[0]}
     assert len(flat_p) == len(flat_s)
     for path, leaf in flat_p:

@@ -1,0 +1,291 @@
+"""Scenario-engine building blocks: ClusterState lifecycle mutations, the
+movement throttle's bandwidth/accounting model, and event application."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Device, EquilibriumConfig, Movement, MovementThrottle,
+                        PlacementRule, Pool, ThrottleConfig, TiB,
+                        equilibrium_balance, small_test_cluster,
+                        simulate_throttled)
+from repro.core.crush import place_pg
+from repro.sim import (DeviceAdd, DeviceFail, DeviceOut, HostAdd, PoolCreate,
+                       PoolGrowth, RebalanceTick, ScenarioEngine, SimConfig)
+
+
+# ---------------------------------------------------------------------------
+# ClusterState mutation APIs
+
+
+def test_add_device_grows_accounting():
+    state = small_test_cluster()
+    n = state.n_devices
+    epoch = state.mutation_epoch
+    dev = Device(id=999, capacity=8 * TiB, device_class="hdd",
+                 host="newhost")
+    state.add_device(dev)
+    assert state.n_devices == n + 1
+    assert state.used(999) == 0.0
+    assert state.capacity_vector()[state.idx(999)] == 8 * TiB
+    assert all(counts.shape == (n + 1,)
+               for counts in state.pool_counts.values())
+    assert state.mutation_epoch > epoch
+    state.check_valid()
+    with pytest.raises(ValueError):
+        state.add_device(dev)
+
+
+def test_grow_pool_updates_sizes_used_and_epoch():
+    state = small_test_cluster()
+    pg = state.pgs_of_pool[0][0]
+    size_before = state.shard_sizes[pg]
+    used_before = state.used()
+    stored_before = state.pools[0].stored_bytes
+    epoch = state.mutation_epoch
+    state.grow_pool(0, 1.0 * TiB)
+    pool = state.pools[0]
+    assert pool.stored_bytes == stored_before + 1.0 * TiB
+    delta = 1.0 * TiB * pool.shard_growth_factor
+    assert state.shard_sizes[pg] == pytest.approx(size_before + delta)
+    # total used grows by replicated bytes: user_bytes * rule size
+    assert state.used().sum() - used_before.sum() == \
+        pytest.approx(1.0 * TiB * pool.size, rel=1e-9)
+    assert state.mutation_epoch > epoch
+    state.check_valid()
+
+
+def test_mark_out_excludes_from_ideal_and_destinations():
+    state = small_test_cluster()
+    osd = state.devices[0].id
+    pool = state.pools[0]
+    assert state.ideal_shard_count(pool)[state.idx(osd)] > 0
+    state.mark_out(osd)
+    assert state.ideal_shard_count(pool)[state.idx(osd)] == 0.0
+    # no move may target an out device
+    pg = state.pgs_of_pool[0][0]
+    for slot in range(pool.size):
+        assert not state.move_is_legal(pg, slot, osd)
+    state.mark_out(osd, out=False)
+    assert state.ideal_shard_count(pool)[state.idx(osd)] > 0
+
+
+def test_add_pool_registers_shards():
+    state = small_test_cluster()
+    rule = PlacementRule.replicated(3, "host", "hdd")
+    pool = Pool(77, "newpool", 8, rule, stored_bytes=0.5 * TiB)
+    acting = {(77, i): place_pg(state.devices, pool, i, seed=1)
+              for i in range(8)}
+    sizes = {(77, i): pool.nominal_shard_size for i in range(8)}
+    used_before = state.used().sum()
+    state.add_pool(pool, acting, sizes)
+    assert 77 in state.pools
+    assert len(state.pgs_of_pool[77]) == 8
+    assert state.used().sum() > used_before
+    assert state.pool_counts[77].sum() == 8 * 3
+    state.check_valid()
+
+
+# ---------------------------------------------------------------------------
+# Movement throttle
+
+
+def _one_move(state):
+    moves, _ = equilibrium_balance(state.copy(), EquilibriumConfig(max_moves=1))
+    assert moves
+    return moves[0]
+
+
+def test_throttle_bandwidth_paces_transfer():
+    state = small_test_cluster()
+    mv = _one_move(state)
+    bw = mv.size / 4
+    q = MovementThrottle(ThrottleConfig(max_concurrent=4,
+                                        device_bytes_per_tick=bw))
+    q.enqueue([mv])
+    ticks = 0
+    while q.backlog_moves:
+        q.tick()
+        ticks += 1
+    assert ticks == 4                   # size / bandwidth
+    assert q.transferred_bytes == pytest.approx(mv.size)
+    assert q.completed_moves == 1
+
+
+def test_throttle_concurrency_cap():
+    state = small_test_cluster()
+    st = state.copy()
+    moves, _ = equilibrium_balance(st, EquilibriumConfig(max_moves=6))
+    assert len(moves) >= 3
+    q = MovementThrottle(ThrottleConfig(max_concurrent=2,
+                                        device_bytes_per_tick=1e-3))
+    q.enqueue(moves)
+    q.tick()
+    assert len(q.in_flight) == 2
+    assert q.backlog_moves == len(moves)
+
+
+def test_throttle_physical_converges_to_target():
+    initial = small_test_cluster()
+    st = initial.copy()
+    moves, _ = equilibrium_balance(st, EquilibriumConfig())
+    res = simulate_throttled(initial, moves,
+                             ThrottleConfig(max_concurrent=4,
+                                            device_bytes_per_tick=TiB))
+    assert res.moved_bytes == pytest.approx(sum(m.size for m in moves))
+    assert res.variance_trajectory[-1] == pytest.approx(res.variance_target,
+                                                        rel=1e-9)
+    # before any transfer lands, physical variance equals the initial one
+    assert res.variance_trajectory[0] == pytest.approx(
+        initial.utilization_variance(), rel=1e-9)
+
+
+def test_throttle_cancel_and_source_lost():
+    state = small_test_cluster()
+    st = state.copy()
+    moves, _ = equilibrium_balance(st, EquilibriumConfig(max_moves=4))
+    q = MovementThrottle(ThrottleConfig(max_concurrent=2,
+                                        device_bytes_per_tick=1e-3))
+    q.enqueue(moves)
+    dst = moves[0].dst_osd
+    dropped = q.cancel_to(dst)
+    assert dropped == sum(1 for m in moves if m.dst_osd == dst)
+    q.source_lost(moves[-1].src_osd)
+    for t in list(q.pending) + q.in_flight:
+        if t.mv.src_osd == moves[-1].src_osd:
+            assert not t.src_holds
+
+
+# ---------------------------------------------------------------------------
+# Engine event application
+
+
+def _engine(state, events, ticks, balancer="none", seed=0):
+    cfg = SimConfig(ticks=ticks, balancer=balancer, seed=seed,
+                    throttle=ThrottleConfig(max_concurrent=8,
+                                            device_bytes_per_tick=TiB))
+    return ScenarioEngine(state, events, cfg)
+
+
+def test_engine_device_fail_drains_and_marks_out():
+    state = small_test_cluster()
+    osd = state.devices[0].id
+    shards_before = len(state.shards_on[osd])
+    assert shards_before > 0
+    eng = _engine(state, [DeviceFail(1, osd_id=osd)], ticks=3)
+    metrics = eng.run()
+    assert osd in state.out_osds
+    assert len(state.shards_on[osd]) == 0
+    state.check_valid()
+    assert metrics.degraded[-1] == 0
+    assert any("DeviceFail" in d for _, d in metrics.event_log)
+
+
+def test_engine_host_add_backfills_capacity_share():
+    state = small_test_cluster()
+    n = state.n_devices
+    eng = _engine(state, [HostAdd(0, n_osds=2, capacity_each=8 * TiB,
+                                  device_class="hdd")], ticks=2)
+    eng.run()
+    assert state.n_devices == n + 2
+    new_devs = state.devices[n:]
+    assert len({d.host for d in new_devs}) == 1
+    # each new device received roughly its ideal share of each hdd pool
+    for pid in (0, 1):
+        ideal = state.ideal_shard_count(state.pools[pid])
+        for d in new_devs:
+            got = int(state.pool_counts[pid][state.idx(d.id)])
+            assert got == int(round(ideal[state.idx(d.id)]))
+    state.check_valid()
+
+
+def test_engine_pool_create_and_growth():
+    state = small_test_cluster()
+    events = [
+        PoolCreate(0, name="fresh", pg_count=8,
+                   rule=PlacementRule.replicated(2, "host", "hdd"),
+                   stored_bytes=0.2 * TiB),
+        PoolGrowth(1, pool_id=3, bytes_per_tick=0.1 * TiB, duration=2),
+    ]
+    eng = _engine(state, events, ticks=4)
+    eng.run()
+    assert 3 in state.pools                # auto-assigned id after 0,1,2
+    assert state.pools[3].name == "fresh"
+    assert state.pools[3].stored_bytes == pytest.approx(0.4 * TiB)
+    state.check_valid()
+
+
+def test_engine_device_out_drains_gracefully():
+    state = small_test_cluster()
+    osd = state.devices[2].id
+    eng = _engine(state, [DeviceOut(0, osd_id=osd)], ticks=2)
+    eng.run()
+    assert osd in state.out_osds
+    assert len(state.shards_on[osd]) == 0
+    state.check_valid()
+
+
+def test_engine_rebalance_none_plans_nothing():
+    state = small_test_cluster()
+    eng = _engine(state, [RebalanceTick(t) for t in range(3)], ticks=3)
+    metrics = eng.run()
+    assert metrics.planned_moves[-1] == 0
+    assert metrics.transferred_bytes[-1] == 0.0
+
+
+def test_engine_rebalance_budget_respected():
+    state = small_test_cluster()
+    eng = _engine(state, [RebalanceTick(0, max_moves=2)], ticks=1,
+                  balancer="equilibrium")
+    metrics = eng.run()
+    assert 0 < metrics.planned_moves[-1] <= 2
+
+
+def test_engine_device_add_single():
+    state = small_test_cluster()
+    n = state.n_devices
+    eng = _engine(state, [DeviceAdd(0, capacity=8 * TiB,
+                                    device_class="hdd")], ticks=2)
+    eng.run()
+    assert state.n_devices == n + 1
+    state.check_valid()
+
+
+def test_engine_unknown_balancer_rejected():
+    with pytest.raises(ValueError):
+        ScenarioEngine(small_test_cluster(), [],
+                       SimConfig(balancer="nope"))
+
+
+def test_throttle_retargeted_transfer_rereads_from_holder():
+    """A shard re-moved while its first transfer is still in flight must
+    supersede that transfer and re-read from the original holder; the
+    intermediate destination never holds phantom bytes."""
+    state = small_test_cluster()
+    st = state.copy()
+    moves, _ = equilibrium_balance(st, EquilibriumConfig(max_moves=1))
+    mv1 = moves[0]
+    # find a second legal hop for the same shard from its new home
+    st2 = state.copy()
+    st2.apply(mv1)
+    dst2 = next(d.id for d in st2.devices
+                if d.id != mv1.src_osd
+                and st2.move_is_legal(mv1.pg, mv1.slot, d.id))
+    mv2 = Movement(mv1.pg, mv1.slot, mv1.dst_osd, dst2, mv1.size)
+    st2.apply(mv2)
+
+    q = MovementThrottle(ThrottleConfig(max_concurrent=4,
+                                        device_bytes_per_tick=mv1.size / 4))
+    q.enqueue([mv1])
+    q.tick()                                 # partially transferred to B
+    q.enqueue([mv2])                         # retarget B -> C mid-flight
+    assert q.backlog_moves == 1              # old transfer superseded
+    assert q.cancelled_moves == 1
+    phys = q.physical_used(st2)
+    # holder (A) still holds the shard, B holds nothing extra, C not yet
+    assert phys[st2.idx(mv1.src_osd)] == pytest.approx(
+        st2.used(mv1.src_osd) + mv1.size)
+    assert phys[st2.idx(mv1.dst_osd)] == pytest.approx(
+        st2.used(mv1.dst_osd))
+    while q.backlog_moves:
+        q.tick()
+    np.testing.assert_allclose(q.physical_used(st2), st2.used(), rtol=1e-12)

@@ -1,0 +1,98 @@
+"""Coverage for the simulate harness: trajectory recording (stride,
+disabled), gained_free_space sign conventions, and throttled replay."""
+
+import numpy as np
+import pytest
+
+from repro.core import (EquilibriumConfig, Movement, ThrottleConfig,
+                        equilibrium_balance, simulate, simulate_throttled,
+                        small_test_cluster)
+
+
+def _balanced_moves():
+    initial = small_test_cluster()
+    state = initial.copy()
+    moves, _ = equilibrium_balance(state, EquilibriumConfig())
+    assert len(moves) >= 4
+    return initial, moves
+
+
+def test_trajectory_stride_one_records_every_move():
+    initial, moves = _balanced_moves()
+    res = simulate(initial, moves, record_trajectory=True,
+                   trajectory_stride=1)
+    # index 0 is the initial state, one sample per move after that
+    assert len(res.variance_trajectory) == len(moves) + 1
+    assert res.variance_trajectory[0] == pytest.approx(res.variance_before)
+    assert res.variance_trajectory[-1] == pytest.approx(res.variance_after)
+    assert res.moved_bytes_trajectory[-1] == pytest.approx(res.moved_bytes)
+
+
+def test_trajectory_stride_subsamples_but_keeps_last():
+    initial, moves = _balanced_moves()
+    stride = 3
+    res = simulate(initial, moves, record_trajectory=True,
+                   trajectory_stride=stride)
+    full = simulate(initial, moves, record_trajectory=True,
+                    trajectory_stride=1)
+    # samples at i % stride == 0 plus the final move (always recorded)
+    n_moves = len(moves)
+    sampled = {i for i in range(n_moves) if i % stride == 0}
+    sampled.add(n_moves - 1)
+    assert len(res.variance_trajectory) == 1 + len(sampled)
+    # the final state must be sampled regardless of stride alignment
+    assert res.variance_trajectory[-1] == pytest.approx(
+        full.variance_trajectory[-1])
+    assert res.free_trajectory[-1] == pytest.approx(full.free_trajectory[-1])
+    # subsampled points are a subset of the full trajectory
+    for v in res.variance_trajectory:
+        assert np.isclose(full.variance_trajectory, v).any()
+
+
+def test_record_trajectory_false_leaves_none():
+    initial, moves = _balanced_moves()
+    res = simulate(initial, moves, record_trajectory=False)
+    assert res.variance_trajectory is None
+    assert res.free_trajectory is None
+    assert res.moved_bytes_trajectory is None
+    # scalar results still populated
+    assert res.moves_applied == len(moves)
+    assert res.moved_bytes == pytest.approx(sum(m.size for m in moves))
+
+
+def test_gained_free_space_sign_conventions():
+    """Balancing gains free space (positive); undoing a balanced plan
+    gives back exactly the negated gain."""
+    initial, moves = _balanced_moves()
+    res = simulate(initial, moves, record_trajectory=False)
+    assert res.gained_free_space > 0
+    assert res.gained_free_space == pytest.approx(
+        res.free_after - res.free_before)
+
+    balanced = initial.copy()
+    for mv in moves:
+        balanced.apply(mv)
+    inverse = [Movement(mv.pg, mv.slot, mv.dst_osd, mv.src_osd, mv.size)
+               for mv in reversed(moves)]
+    back = simulate(balanced, inverse, record_trajectory=False)
+    assert back.gained_free_space < 0
+    assert back.gained_free_space == pytest.approx(-res.gained_free_space,
+                                                   rel=1e-9)
+
+
+def test_throttled_replay_matches_untrottled_endpoint():
+    initial, moves = _balanced_moves()
+    plain = simulate(initial, moves, record_trajectory=False)
+    throttled = simulate_throttled(
+        initial, moves, ThrottleConfig(max_concurrent=3,
+                                       device_bytes_per_tick=2.0 * 1024**4))
+    assert throttled.moved_bytes == pytest.approx(plain.moved_bytes)
+    assert throttled.variance_target == pytest.approx(plain.variance_after)
+    assert throttled.variance_trajectory[-1] == pytest.approx(
+        plain.variance_after, rel=1e-9)
+    # the physical series is bracketed by the initial and final variance
+    assert throttled.variance_trajectory[0] == pytest.approx(
+        plain.variance_before, rel=1e-9)
+    assert throttled.ticks == len(throttled.variance_trajectory) - 1
+    # in-flight never exceeds the configured concurrency
+    assert throttled.in_flight_trajectory.max() <= 3
