@@ -7,10 +7,14 @@ Four engines over the same §3.1 semantics (bit-identical sequences):
   blocking ``bool(found)`` host sync per source per move.  Kept here (not
   in the library) as the fixed baseline of the perf trajectory.
 * ``jax-legacy`` — the seed path after the occ_dev gather hoist
-  (``balance_fast(engine="jax-legacy")``): still per-source dispatch+sync.
-* ``numpy``     — the dense-NumPy engine.
-* ``batch``     — the device-resident chunked engine
-  (:func:`repro.core.equilibrium_batch.balance_batch`).
+  (planner ``equilibrium_jax_legacy``): still per-source dispatch+sync.
+* ``numpy``     — the dense-NumPy engine (planner ``equilibrium``).
+* ``batch``     — the device-resident chunked engine (planner
+  ``equilibrium_batch``).
+
+All three registry engines run through the unified planner API
+(:func:`repro.core.planner.create_planner`), one fresh planner per timed
+call — cold-start throughput, the same quantity the seed measured.
 
 Engines are jit-warmed on a scratch copy, then timed over the same
 ``max_moves`` window from the same initial state (steady-state planning
@@ -30,7 +34,7 @@ import time
 import numpy as np
 
 from benchmarks.run import git_sha
-from repro.core import EquilibriumConfig, balance_batch, balance_fast
+from repro.core import EquilibriumConfig, create_planner
 from repro.core.clustergen import cluster_b
 from repro.core.equilibrium_jax import DenseState, _jax_select
 
@@ -116,11 +120,19 @@ def balance_seed_jax(state, cfg):
 # ---------------------------------------------------------------------------
 
 
+def _registry_engine(name):
+    """Fresh planner per call (cold start), through the unified API."""
+    def run(state, cfg):
+        result = create_planner(name, cfg=cfg).plan(state)
+        return result.moves, result.records
+    return run
+
+
 ENGINES = (
     ("seed-jax", balance_seed_jax),
-    ("jax-legacy", lambda s, c: balance_fast(s, c, engine="jax-legacy")),
-    ("numpy", lambda s, c: balance_fast(s, c, engine="numpy")),
-    ("batch", lambda s, c: balance_batch(s, c)),
+    ("jax-legacy", _registry_engine("equilibrium_jax_legacy")),
+    ("numpy", _registry_engine("equilibrium")),
+    ("batch", _registry_engine("equilibrium_batch")),
 )
 
 

@@ -33,8 +33,8 @@ import json
 import time
 
 from benchmarks.run import git_sha
-from repro.core import TiB
-from repro.sim import BALANCERS, SCENARIOS, run_scenario
+from repro.core import TiB, available_planners
+from repro.sim import SCENARIOS, run_scenario
 
 DEFAULT_BALANCERS = ("equilibrium_batch", "mgr")
 
@@ -100,14 +100,16 @@ def main() -> None:
                     metavar="NAME", choices=sorted(SCENARIOS),
                     help="run only this scenario (repeatable)")
     ap.add_argument("--balancers", default=",".join(DEFAULT_BALANCERS),
-                    help=f"comma list from {BALANCERS}")
+                    help="comma list of registered planners "
+                         f"{available_planners()}")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_scenarios.json")
     args = ap.parse_args()
     balancers = tuple(b for b in args.balancers.split(",") if b)
     for b in balancers:
-        if b not in BALANCERS:
-            ap.error(f"unknown balancer {b!r}: expected one of {BALANCERS}")
+        if b not in available_planners():
+            ap.error(f"unknown balancer {b!r}: expected one of "
+                     f"{available_planners()}")
     bench_scenarios(args.scenario, balancers, seed=args.seed,
                     quick=args.quick, out=args.out)
 

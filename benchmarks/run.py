@@ -4,13 +4,23 @@ framework-level analyses.  Prints ``name,us_per_call,derived`` CSV rows;
 a JSON list — the ``BENCH_planner.json`` schema:
 ``[{"name", "us_per_call", "derived", "git_sha"}, ...]``.
 
+``--scenarios`` swaps in the lifecycle-scenario suite (all registered
+scenarios, every default balancer from the planner registry).  The two
+output flags compose: one invocation writes *both* artifacts — the CSV
+rows of every suite that ran go to ``--json PATH``, and the full
+per-tick scenario results go to ``--scenarios-out`` (default
+``BENCH_scenarios.json``); the two paths are guarded against clobbering
+each other.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+        [--scenarios] [--scenarios-out PATH] [--seed N]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import subprocess
 import sys
 import traceback
@@ -33,16 +43,27 @@ def main() -> None:
                     help="also write rows as JSON (BENCH_planner.json "
                          "schema: name, us_per_call, derived, git_sha)")
     ap.add_argument("--scenarios", action="store_true",
-                    help="run the lifecycle-scenario suite instead (all "
-                         "registered scenarios, equilibrium_batch vs mgr) "
-                         "and write BENCH_scenarios.json")
+                    help="run the lifecycle-scenario suite instead of the "
+                         "paper suites; composes with --json (rows) and "
+                         "--scenarios-out (full per-tick results)")
+    ap.add_argument("--scenarios-out", metavar="PATH",
+                    default="BENCH_scenarios.json",
+                    help="where the scenario suite writes its full results")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="scenario-suite seed (ignored without --scenarios)")
     args = ap.parse_args()
+
+    if args.json and args.scenarios and \
+            os.path.abspath(args.json) == os.path.abspath(args.scenarios_out):
+        ap.error("--json and --scenarios-out point at the same file; the "
+                 "rows artifact would clobber the scenario results")
 
     if args.scenarios:
         from benchmarks.bench_scenarios import bench_scenarios
 
         def scenario_suite():
-            _, rows = bench_scenarios(quick=args.quick)
+            _, rows = bench_scenarios(quick=args.quick, seed=args.seed,
+                                      out=args.scenarios_out)
             return rows
 
         suites = [("scenarios", scenario_suite)]

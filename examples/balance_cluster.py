@@ -6,18 +6,17 @@ both balancers from the same initial state, Table-1 row + trajectory CSV.
 
 import argparse
 import csv
-import functools
-import sys
 
 from repro.core import (EquilibriumConfig, MgrBalancerConfig, PAPER_CLUSTERS,
-                        TiB, balance_fast, mgr_balance, simulate)
+                        TiB, create_planner, simulate)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--cluster", choices=sorted(PAPER_CLUSTERS), default="A")
 ap.add_argument("--max-moves", type=int, default=10_000)
-ap.add_argument("--engine", default="numpy",
-                choices=("numpy", "batch", "jax-legacy"),
-                help="Equilibrium engine: dense-NumPy (default), the "
+ap.add_argument("--engine", default="equilibrium",
+                choices=("equilibrium", "equilibrium_batch",
+                         "equilibrium_jax_legacy"),
+                help="Equilibrium planner: dense-NumPy (default), the "
                      "device-resident batched engine, or the per-source "
                      "legacy JAX path — all bit-identical")
 ap.add_argument("--trajectory-csv", default=None)
@@ -27,13 +26,12 @@ initial = PAPER_CLUSTERS[args.cluster]()
 print(f"cluster {args.cluster}: {initial.n_devices} OSDs, "
       f"{len(initial.acting)} PGs, {len(initial.pools)} pools")
 
-equilibrium = functools.partial(balance_fast, engine=args.engine)
 results = {}
-for name, fn, cfg in (
-        ("default", mgr_balance, MgrBalancerConfig(max_moves=args.max_moves)),
-        ("equilibrium", equilibrium,
+for name, planner_name, cfg in (
+        ("default", "mgr", MgrBalancerConfig(max_moves=args.max_moves)),
+        ("equilibrium", args.engine,
          EquilibriumConfig(max_moves=args.max_moves))):
-    moves, _ = fn(initial.copy(), cfg)
+    moves = create_planner(planner_name, cfg=cfg).plan(initial.copy()).moves
     res = simulate(initial, moves, trajectory_stride=max(1, len(moves) // 100))
     results[name] = res
     print(f"  {name:12s}: {len(moves):5d} moves | gained "

@@ -8,8 +8,7 @@ volume, and utilization variance (Table-1-style row).
 """
 
 from repro.core import (EquilibriumConfig, MgrBalancerConfig, TiB,
-                        balance_fast, mgr_balance, simulate,
-                        small_test_cluster)
+                        create_planner, simulate, small_test_cluster)
 
 initial = small_test_cluster()
 print(f"cluster: {initial.n_devices} OSDs, {len(initial.acting)} PGs, "
@@ -17,8 +16,10 @@ print(f"cluster: {initial.n_devices} OSDs, {len(initial.acting)} PGs, "
       f"–{initial.utilization().max():.2f}, "
       f"variance {initial.utilization_variance():.4f}")
 
-mgr_moves, _ = mgr_balance(initial.copy(), MgrBalancerConfig())
-eq_moves, _ = balance_fast(initial.copy(), EquilibriumConfig())
+mgr_moves = create_planner("mgr", cfg=MgrBalancerConfig()) \
+    .plan(initial.copy()).moves
+eq_moves = create_planner("equilibrium", cfg=EquilibriumConfig()) \
+    .plan(initial.copy()).moves
 
 for name, moves in (("ceph mgr balancer", mgr_moves),
                     ("equilibrium      ", eq_moves)):

@@ -11,13 +11,13 @@ annotations, then the summary — the interactive view of what
 
 import argparse
 
-from repro.core import TiB
-from repro.sim import BALANCERS, SCENARIOS, run_scenario
+from repro.core import TiB, available_planners
+from repro.sim import SCENARIOS, run_scenario
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scenario", choices=sorted(SCENARIOS),
                 default="steady-growth")
-ap.add_argument("--balancer", choices=BALANCERS,
+ap.add_argument("--balancer", choices=available_planners(),
                 default="equilibrium_batch")
 ap.add_argument("--seed", type=int, default=0)
 ap.add_argument("--quick", action="store_true", help="short tick count")

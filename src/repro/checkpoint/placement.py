@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core import (ClusterState, Device, EquilibriumConfig, Movement,
                         PlacementRule, Pool, build_cluster)
-from repro.core.equilibrium_jax import balance_fast
+from repro.core.planner import create_planner
 
 
 @dataclass(frozen=True)
@@ -79,5 +79,6 @@ def plan_placement(shards: dict[str, float], hosts: list[StorageHost],
 def rebalance(placement: CheckpointPlacement,
               cfg: EquilibriumConfig | None = None) -> list[Movement]:
     cfg = cfg or EquilibriumConfig(k=8, count_slack=1e9)
-    movements, _ = balance_fast(placement.state, cfg)
+    movements = create_planner("equilibrium",
+                               cfg=cfg).plan(placement.state).moves
     return movements

@@ -1,14 +1,23 @@
 """Core: the paper's contribution — size-aware shard balancing (Equilibrium),
-the mgr-balancer baseline, the cluster model, and the simulation harness."""
+the mgr-balancer baseline, the cluster model, and the simulation harness.
 
-from .cluster import (ClusterState, Device, Movement, PlacementRule, Pool,
-                      RuleStep, TiB, GiB)
+The planner API (:mod:`repro.core.planner`) is the supported entry point
+to every balancer; ``equilibrium_balance`` / ``balance_fast`` /
+``balance_batch`` / ``mgr_balance`` are deprecated shims kept for
+compatibility."""
+
+from .cluster import (ClusterDelta, ClusterState, Device, DeviceAddDelta,
+                      DeviceOutDelta, GiB, Movement, MovementDelta,
+                      PlacementRule, Pool, PoolCreateDelta, PoolGrowthDelta,
+                      RuleStep, TiB)
 from .crush import build_cluster, place_pg
 from .clustergen import PAPER_CLUSTERS, small_test_cluster
 from .equilibrium import EquilibriumConfig, balance as equilibrium_balance
 from .equilibrium_batch import BatchPlanner, balance_batch
 from .equilibrium_jax import DenseState, balance_fast
 from .mgr_balancer import MgrBalancerConfig, balance as mgr_balance
+from .planner import (PlanResult, Planner, PlannerSpec, available_planners,
+                      create_planner, get_planner_spec, register_planner)
 from .simulate import (MovementThrottle, SimulationResult, ThrottleConfig,
                        ThrottledReplayResult, compare_balancers, simulate,
                        simulate_throttled)
@@ -21,4 +30,9 @@ __all__ = [
     "MgrBalancerConfig", "mgr_balance", "SimulationResult",
     "compare_balancers", "simulate", "MovementThrottle", "ThrottleConfig",
     "ThrottledReplayResult", "simulate_throttled",
+    # planner API (PR 3)
+    "Planner", "PlanResult", "PlannerSpec", "register_planner",
+    "create_planner", "get_planner_spec", "available_planners",
+    "ClusterDelta", "MovementDelta", "PoolGrowthDelta", "DeviceAddDelta",
+    "DeviceOutDelta", "PoolCreateDelta",
 ]

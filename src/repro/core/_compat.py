@@ -1,0 +1,26 @@
+"""Deprecation plumbing for the pre-protocol balancer entry points.
+
+PR 3 unified the four divergent planner entry points behind the
+:mod:`repro.core.planner` protocol + registry; the old module-level
+functions survive as thin shims that warn once per name and delegate.
+Nothing inside ``src/`` may call a deprecated entry point — enforced by
+``tools/check_deprecated.py`` (run in CI and by
+tests/test_api_surface.py).
+"""
+
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_deprecated(old: str, replacement: str) -> None:
+    """Emit one DeprecationWarning per process for ``old``."""
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated; use repro.core.planner.{replacement} "
+        f"(the unified Planner protocol) instead",
+        DeprecationWarning, stacklevel=3)

@@ -160,6 +160,63 @@ class Movement:
     size: float                      # shard bytes moved
 
 
+# --------------------------------------------------------------------------
+# Cluster deltas — the typed mutation vocabulary of the planner API
+#
+# Every ClusterState mutator emits exactly one delta per mutation_epoch
+# bump to its subscribers, so an incremental planner can reconstruct *what
+# changed* between two epochs instead of diffing snapshots.  The taxonomy
+# is re-exported by :mod:`repro.core.planner` (the API home); see
+# ``Planner.observe``.
+
+
+@dataclass(frozen=True)
+class ClusterDelta:
+    """Base: one state mutation.  ``epoch`` is ``mutation_epoch`` *after*
+    the mutation, so a subscriber that has seen every delta in
+    ``(synced_epoch, state.mutation_epoch]`` has seen every change."""
+
+    epoch: int
+
+
+@dataclass(frozen=True)
+class MovementDelta(ClusterDelta):
+    """One applied shard movement (:meth:`ClusterState.apply`)."""
+
+    movement: Movement
+
+
+@dataclass(frozen=True)
+class PoolGrowthDelta(ClusterDelta):
+    """``user_bytes`` ingested into ``pool_id``: every shard of the pool
+    grew by the pool's per-shard growth factor."""
+
+    pool_id: int
+    user_bytes: float
+
+
+@dataclass(frozen=True)
+class DeviceAddDelta(ClusterDelta):
+    """``device`` joined the cluster empty (expansion)."""
+
+    device: Device
+
+
+@dataclass(frozen=True)
+class DeviceOutDelta(ClusterDelta):
+    """``osd_id`` weighted out (``out=True``) or back in (``out=False``)."""
+
+    osd_id: int
+    out: bool
+
+
+@dataclass(frozen=True)
+class PoolCreateDelta(ClusterDelta):
+    """Pool ``pool_id`` registered with its CRUSH-placed acting sets."""
+
+    pool_id: int
+
+
 class ClusterState:
     """Mutable placement state + accounting.
 
@@ -186,6 +243,11 @@ class ClusterState:
         # grow_pool / add_pool): lets incremental planners detect that their
         # dense mirror of this state went stale (see BatchPlanner).
         self.mutation_epoch: int = 0
+        # Delta subscribers (see subscribe()): each mutator emits exactly
+        # one ClusterDelta per epoch bump, so subscribed planners can
+        # replan incrementally instead of rebuilding from a snapshot.
+        # Copies start with no subscribers.
+        self._subscribers: list = []
 
         self._capacity = np.array([d.capacity for d in self.devices], dtype=np.float64)
         self._id_to_idx = {d.id: i for i, d in enumerate(self.devices)}
@@ -209,6 +271,24 @@ class ClusterState:
                 self.pool_counts[pg[0]][self._id_to_idx[osd]] += 1
 
     # -- plumbing ----------------------------------------------------------
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(delta: ClusterDelta)`` to be called on every
+        mutation.  A callback that returns ``False`` is pruned (the hook
+        for weakly-bound subscribers whose owner died); any other return
+        value keeps it registered."""
+        self._subscribers.append(fn)
+
+    def unsubscribe(self, fn) -> None:
+        try:
+            self._subscribers.remove(fn)
+        except ValueError:
+            pass
+
+    def _notify(self, delta: ClusterDelta) -> None:
+        for fn in list(self._subscribers):
+            if fn(delta) is False:
+                self.unsubscribe(fn)
 
     def idx(self, osd_id: int) -> int:
         return self._id_to_idx[osd_id]
@@ -383,6 +463,8 @@ class ClusterState:
         self.pool_counts[mv.pg[0]][si] -= 1
         self.pool_counts[mv.pg[0]][di] += 1
         self.mutation_epoch += 1
+        if self._subscribers:
+            self._notify(MovementDelta(self.mutation_epoch, mv))
 
     def undo(self, mv: Movement) -> None:
         self.apply(Movement(mv.pg, mv.slot, mv.dst_osd, mv.src_osd, mv.size))
@@ -404,6 +486,8 @@ class ClusterState:
         for p in self.pool_counts:
             self.pool_counts[p] = np.append(self.pool_counts[p], 0)
         self.mutation_epoch += 1
+        if self._subscribers:
+            self._notify(DeviceAddDelta(self.mutation_epoch, dev))
 
     def mark_out(self, osd_id: int, out: bool = True) -> None:
         """Set an OSD's weight to 0 ("out") or restore it ("in").  An out
@@ -416,6 +500,8 @@ class ClusterState:
         else:
             self.out_osds.discard(osd_id)
         self.mutation_epoch += 1
+        if self._subscribers:
+            self._notify(DeviceOutDelta(self.mutation_epoch, osd_id, out))
 
     def grow_pool(self, pool_id: int, user_bytes: float) -> None:
         """Ingest ``user_bytes`` of user data into a pool: every PG's shard
@@ -433,6 +519,9 @@ class ClusterState:
             for osd in self.acting[pg]:
                 self._used[self._id_to_idx[osd]] += delta
         self.mutation_epoch += 1
+        if self._subscribers:
+            self._notify(PoolGrowthDelta(self.mutation_epoch, pool_id,
+                                         user_bytes))
 
     def add_pool(self, pool: Pool, acting: dict[PGId, list[int]],
                  shard_sizes: dict[PGId, float]) -> None:
@@ -456,6 +545,8 @@ class ClusterState:
                 self.shards_on[osd].add((pg, slot))
                 self.pool_counts[pool.id][self._id_to_idx[osd]] += 1
         self.mutation_epoch += 1
+        if self._subscribers:
+            self._notify(PoolCreateDelta(self.mutation_epoch, pool.id))
 
     # -- integrity (used by tests / property checks) -------------------------
 

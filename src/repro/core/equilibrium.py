@@ -137,13 +137,14 @@ def plan_one_move(state: ClusterState, cfg: EquilibriumConfig,
     return None, len(src_order)
 
 
-def balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
-            record_trajectory: bool = False, record_free_space: bool = True):
+def _balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
+             record_trajectory: bool = False, record_free_space: bool = True):
     """Run Equilibrium to convergence on ``state`` (mutated in place).
 
     Returns (movements, records) — ``records`` carries per-move metrics
     (variance, free space, planning time, sources tried) used by the
-    Fig 4/5/6 benchmarks.
+    Fig 4/5/6 benchmarks.  Library-internal engine entry; the public API
+    is ``repro.core.planner.create_planner("equilibrium_faithful")``.
     """
     cfg = cfg or EquilibriumConfig()
     tracker = _IncrementalVariance(state.used(), state.capacity_vector())
@@ -168,3 +169,13 @@ def balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 sources_tried=tried,
             ))
     return movements, records
+
+
+def balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
+            record_trajectory: bool = False, record_free_space: bool = True):
+    """Deprecated: use ``create_planner("equilibrium_faithful")`` from
+    :mod:`repro.core.planner` (same move sequences, unified PlanResult)."""
+    from ._compat import warn_deprecated
+    warn_deprecated("repro.core.equilibrium.balance",
+                    'create_planner("equilibrium_faithful")')
+    return _balance(state, cfg, record_trajectory, record_free_space)

@@ -60,11 +60,13 @@ resumes (exercised by the padding-boundary tests).
 from __future__ import annotations
 
 import time
+import weakref
 from functools import partial
 
 import numpy as np
 
-from .cluster import ClusterState, Movement
+from .cluster import (ClusterDelta, ClusterState, DeviceAddDelta, Movement,
+                      PoolGrowthDelta)
 from .equilibrium import EquilibriumConfig, MoveRecord
 
 try:  # pragma: no cover - JAX is always present in this repo
@@ -400,15 +402,34 @@ class BatchPlanner:
     :class:`ClusterState` has not been mutated by anyone else.
 
     Staleness is detected through ``state.mutation_epoch``: the planner
-    records the epoch after replaying its own emitted moves; any external
-    mutation (pool growth, device add/out, another balancer's apply) makes
-    the epochs disagree and forces a rebuild.  Because the §3.1 sequence
-    is deterministic, a warm continuation emits exactly the moves a
-    cold-start planner would (property-tested in
-    tests/test_equilibrium_batch.py), including moves the device planned
-    past a call's budget — those are stashed (they are already applied in
-    the device carry) and emitted first by the next call.
+    records the epoch after replaying its own emitted moves; an external
+    mutation makes the epochs disagree.  The planner subscribes to the
+    bound state's :class:`~repro.core.cluster.ClusterDelta` stream
+    (:meth:`ClusterState.subscribe`), so at the next :meth:`plan` it knows
+    *what* changed, not just that something did:
+
+    * :class:`PoolGrowthDelta` and :class:`DeviceAddDelta` are **absorbed
+      into the device carry** (:meth:`observe` / ``_absorb``): shard sizes,
+      utilizations, ideals and the sorted util-order are refreshed in
+      place, and the ``n_dev`` axis is extended with padded rows for new
+      devices — no dense rebuild, and for pure growth not even a jit
+      recompile.  The refreshed carry is bitwise equal to a freshly built
+      one, so warm continuations stay bit-identical to cold starts
+      (regression-tested via :func:`dense_rebuild_count`).
+    * Any other delta (device out, pool create, a foreign balancer's
+      movements), a missed delta, or a non-empty overshoot stash falls
+      back to the full rebuild — correctness never depends on absorption.
+
+    Because the §3.1 sequence is deterministic, a warm continuation emits
+    exactly the moves a cold-start planner would (property-tested in
+    tests/test_equilibrium_batch.py and tests/test_planner_api.py),
+    including moves the device planned past a call's budget — those are
+    stashed (they are already applied in the device carry) and emitted
+    first by the next call.
     """
+
+    #: pending-delta backlog above which we stop tracking and just rebuild
+    PENDING_CAP = 8192
 
     def __init__(self, state: ClusterState,
                  cfg: EquilibriumConfig | None = None, chunk: int = 64,
@@ -433,6 +454,22 @@ class BatchPlanner:
         # moves the device already planned+applied in the carry but the
         # host has not yet emitted: (row, src, dst, tried, seconds)
         self._stash: list[tuple[int, int, int, int, float]] = []
+        # deltas observed since the last sync, keyed by epoch; _invalid is
+        # set when the stream is unusable (overflow, unstamped delta)
+        self._pending: dict[int, ClusterDelta] = {}
+        self._invalid = False
+        self._absorbed_deltas = 0       # lifetime count (stats/tests)
+        # subscribe weakly: the state must not keep a dead planner alive
+        ref = weakref.ref(self)
+
+        def _deliver(delta, _ref=ref):
+            planner = _ref()
+            if planner is None:
+                return False            # prune this subscription
+            planner._record_delta(delta)
+            return True
+
+        state.subscribe(_deliver)
 
     # -- dense-state lifecycle ----------------------------------------------
 
@@ -448,6 +485,8 @@ class BatchPlanner:
         state, cfg = self.state, self.cfg
         self._stash = []
         self._done = False
+        self._pending.clear()
+        self._invalid = False
         self._dense = None
         self._dyn = None
         self._k = min(cfg.k, max(state.n_devices, 1))
@@ -482,10 +521,10 @@ class BatchPlanner:
             jnp.asarray(dense.sh_scnt, jnp.int32),
             jnp.asarray(dense.ideal),
         )
+        from .equilibrium_jax import dst_count_ok
         nrows_np = np.array([len(s) for s in dense.rows_on_dev], np.int32)
-        dst_ok_np = (np.abs(dense.pool_counts + 1.0 - dense.ideal)
-                     <= np.abs(dense.pool_counts - dense.ideal)
-                     + cfg.count_slack)
+        dst_ok_np = dst_count_ok(dense.pool_counts, dense.ideal,
+                                 cfg.count_slack)
         order_np = np.argsort(-dense.util, kind="stable").astype(np.int32)
         self._r_cap = self._round_cap(
             max(self.row_capacity, int(nrows_np.max()))
@@ -509,6 +548,174 @@ class BatchPlanner:
     @property
     def stale(self) -> bool:
         return self._epoch != self.state.mutation_epoch
+
+    # -- delta observation (the incremental-replanning surface) --------------
+
+    def _record_delta(self, delta: ClusterDelta) -> None:
+        if len(self._pending) >= self.PENDING_CAP:
+            self._invalid = True
+            self._pending.clear()
+            return
+        existing = self._pending.get(delta.epoch)
+        if existing is None:
+            self._pending[delta.epoch] = delta
+        elif existing != delta:
+            # two different claims about one epoch: the stream is
+            # untrustworthy — rebuild rather than absorb the wrong one
+            self._invalid = True
+
+    def _drop_synced_pending(self) -> None:
+        """Forget deltas at or below the synced epoch (they are already
+        reflected in the carry — typically our own replayed movements)."""
+        self._pending = {e: d for e, d in self._pending.items()
+                         if e > self._epoch}
+
+    def _pending_run(self) -> list[ClusterDelta] | None:
+        """The contiguous delta run covering (synced epoch, state epoch],
+        or None if any mutation went unobserved."""
+        run = []
+        for epoch in range(self._epoch + 1, self.state.mutation_epoch + 1):
+            delta = self._pending.get(epoch)
+            if delta is None:
+                return None
+            run.append(delta)
+        return run
+
+    def _class_ids_stable(self) -> bool:
+        """Device classes are dense sorted ids in the carry; a new class
+        that sorts before an existing one would renumber ``sh_class``."""
+        from .equilibrium_jax import device_class_ids
+        new_id, _ = device_class_ids(self.state.devices)
+        return all(new_id.get(c) == i
+                   for c, i in self._dense.class_id.items())
+
+    def _absorbable(self, run: list[ClusterDelta] | None) -> bool:
+        if run is None or self._invalid or self._stash or self._dyn is None:
+            return False
+        for delta in run:
+            if isinstance(delta, PoolGrowthDelta):
+                continue
+            if isinstance(delta, DeviceAddDelta):
+                if not self._class_ids_stable():
+                    return False
+                continue
+            return False
+        return True
+
+    def observe(self, delta: ClusterDelta) -> bool:
+        """Record one cluster delta; True iff the planner can stay warm.
+
+        Deltas from the bound state arrive automatically through the
+        subscription, so calling this is only needed for deltas produced
+        elsewhere (it deduplicates by epoch).  Returning False means the
+        next :meth:`plan` will rebuild the dense mirror; True means the
+        pending deltas will be absorbed into the device carry.
+        """
+        if getattr(delta, "epoch", -1) < 0:
+            self._invalid = True        # unstamped: cannot be ordered
+        else:
+            self._record_delta(delta)
+        if self._epoch < 0 or not self.stale:
+            return True                 # nothing warm to invalidate (yet)
+        return self._absorbable(self._pending_run())
+
+    def reset(self) -> None:
+        """Drop all warm state; the next :meth:`plan` cold-starts."""
+        self._epoch = -1
+        self._dyn = None
+        self._dense = None
+        self._stash = []
+        self._done = False
+        self._pending.clear()
+        self._invalid = False
+
+    def _absorb(self) -> bool:
+        """Apply the pending delta run directly to the device carry.
+
+        Only pool growth and device adds are absorbable.  Every refreshed
+        array is recomputed with the *same host-side expressions*
+        :meth:`_build` uses (``state.used()``, ``ideal_shard_count``,
+        stable argsorts, the ``(size desc, row asc)`` row order), so the
+        absorbed carry is bitwise equal to a freshly built one and the
+        continued move sequence stays bit-identical to a cold start.
+        """
+        from .equilibrium_jax import (device_class_ids, device_domain_ids,
+                                      dst_count_ok)
+        run = self._pending_run()
+        if not self._absorbable(run):
+            return False
+        state, cfg, dense = self.state, self.cfg, self._dense
+        added = [d.device for d in run if isinstance(d, DeviceAddDelta)]
+        grew = any(isinstance(d, PoolGrowthDelta) for d in run)
+
+        # host-side rebuild-equivalent views of the mutated cluster
+        cap = state.capacity_vector()
+        used = state.used()
+        util = used / cap
+        n_dev = state.n_devices
+        pool_ids = sorted(state.pools)
+        ideal = np.stack([state.ideal_shard_count(state.pools[p])
+                          for p in pool_ids])
+        pool_counts = np.stack([state.pool_counts[p] for p in pool_ids]
+                               ).astype(np.float64)
+        dst_ok = dst_count_ok(pool_counts, ideal, cfg.count_slack)
+        sh_size = np.array([state.shard_sizes[pg]
+                            for pg, _ in dense.shard_key])
+
+        # per-device row table: extend for new devices; re-sort the
+        # faithful (size desc, row asc) candidate order when sizes moved
+        rows_np, nrows_np = (np.array(a) for a in
+                             _fetch((self._dyn[7], self._dyn[8])))
+        if added:
+            pad_rows = np.full((len(added), rows_np.shape[1]), -1, np.int32)
+            rows_np = np.concatenate([rows_np, pad_rows])
+            nrows_np = np.concatenate(
+                [nrows_np, np.zeros(len(added), np.int32)])
+        if grew:
+            for d in range(n_dev):
+                nd = int(nrows_np[d])
+                order = sorted(rows_np[d, :nd].tolist(),
+                               key=lambda r: (-sh_size[r], r))
+                rows_np[d, :nd] = order
+
+        if added:
+            # device class / domain / in-mask columns, rebuilt with the
+            # same shared helpers DenseState.__init__ uses (append-only
+            # device order keeps every existing id, verified by
+            # _class_ids_stable)
+            dense.class_id, dense.dev_class = device_class_ids(state.devices)
+            dense.dev_domain_arr, _ = device_domain_ids(state.devices,
+                                                        dense.levels)
+            dense.n_dev = n_dev
+            self._k = min(cfg.k, max(n_dev, 1))
+            self._kb = min(self._kb, self._k)
+        dense.cap = cap
+        dense.used = used
+        dense.util = util
+        dense.sh_size = sh_size          # Movement sizes read from here
+        dense.ideal = ideal
+        dense.pool_counts = pool_counts
+        dense.dev_in = state.in_mask()
+
+        self._const = (
+            jnp.asarray(dense.cap), jnp.asarray(dense.dev_class, jnp.int32),
+            jnp.asarray(dense.dev_in),
+            jnp.asarray(dense.dev_domain_arr, jnp.int32),
+            jnp.asarray(sh_size.astype(np.float64)),
+        ) + self._const[5:12] + (jnp.asarray(ideal),)
+        self._dyn = (
+            jnp.asarray(used), jnp.asarray(util),
+            jnp.asarray(float(util.sum()), jnp.float64),
+            jnp.asarray(float((util ** 2).sum()), jnp.float64),
+            self._dyn[4], jnp.asarray(pool_counts), jnp.asarray(dst_ok),
+            jnp.asarray(rows_np), jnp.asarray(nrows_np),
+            jnp.asarray(np.argsort(-util, kind="stable").astype(np.int32)),
+        )
+        self._done = False
+        self._absorbed_deltas += len(run)
+        self._epoch = state.mutation_epoch
+        self._drop_synced_pending()
+        return True
 
     # -- planning ------------------------------------------------------------
 
@@ -571,7 +778,9 @@ class BatchPlanner:
         budget = self.cfg.max_moves if max_moves is None else max_moves
         state = self.state
         with enable_x64():
-            if self._epoch < 0 or self.stale:
+            if self._epoch < 0:
+                self._build()
+            elif self.stale and not self._absorb():
                 self._build()
             if self._dyn is None or budget <= 0:
                 return [], []
@@ -599,17 +808,24 @@ class BatchPlanner:
                         sources_tried=tried,
                     ))
             self._epoch = state.mutation_epoch
+            self._drop_synced_pending()     # our own replayed movements
+            # fully synced to the state: any backlog concern (e.g. our
+            # own replay overflowing PENDING_CAP on a large plan) is
+            # moot — staleness detection is the epoch compare, not this
+            self._invalid = False
         return movements, records
 
 
-def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
-                  record_trajectory: bool = False,
-                  record_free_space: bool = True, chunk: int = 64,
-                  source_block: int = 1, row_block: int = 8,
-                  row_capacity: int | None = None,
-                  select_backend: str = "auto"):
-    """Device-resident drop-in for :func:`repro.core.equilibrium.balance`:
+def _balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
+                   record_trajectory: bool = False,
+                   record_free_space: bool = True, chunk: int = 64,
+                   source_block: int = 1, row_block: int = 8,
+                   row_capacity: int | None = None,
+                   select_backend: str = "auto"):
+    """Device-resident drop-in for the faithful §3.1 planner:
     identical move sequences, one host sync per ``chunk`` moves.
+    Library-internal engine entry; the public API is
+    ``repro.core.planner.create_planner("equilibrium_batch")``.
 
     ``source_block`` × ``row_block`` is the tile of the batched
     ``(k, R_max, n_dev)`` legality tensor evaluated per inner iteration
@@ -632,12 +848,31 @@ def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
     """
     cfg = cfg or EquilibriumConfig()
     if not _HAVE_JAX:  # pragma: no cover - numpy fallback, same outputs
-        from .equilibrium_jax import balance_fast
-        return balance_fast(state, cfg, record_trajectory=record_trajectory,
-                            record_free_space=record_free_space,
-                            engine="numpy")
+        from .equilibrium_jax import _balance_fast
+        return _balance_fast(state, cfg, record_trajectory=record_trajectory,
+                             record_free_space=record_free_space,
+                             engine="numpy")
     planner = BatchPlanner(state, cfg, chunk=chunk, source_block=source_block,
                            row_block=row_block, row_capacity=row_capacity,
                            select_backend=select_backend)
     return planner.plan(record_trajectory=record_trajectory,
                         record_free_space=record_free_space)
+
+
+def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
+                  record_trajectory: bool = False,
+                  record_free_space: bool = True, chunk: int = 64,
+                  source_block: int = 1, row_block: int = 8,
+                  row_capacity: int | None = None,
+                  select_backend: str = "auto"):
+    """Deprecated: use ``create_planner("equilibrium_batch")`` from
+    :mod:`repro.core.planner`, or hold a :class:`BatchPlanner` directly
+    for warm-started incremental planning."""
+    from ._compat import warn_deprecated
+    warn_deprecated("repro.core.equilibrium_batch.balance_batch",
+                    'create_planner("equilibrium_batch")')
+    return _balance_batch(state, cfg, record_trajectory=record_trajectory,
+                          record_free_space=record_free_space, chunk=chunk,
+                          source_block=source_block, row_block=row_block,
+                          row_capacity=row_capacity,
+                          select_backend=select_backend)

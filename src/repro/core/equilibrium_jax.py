@@ -57,6 +57,39 @@ except Exception:  # pragma: no cover
 
 # ---------------------------------------------------------------------------
 # Dense registry of cluster state
+#
+# The three helpers below are the *single source* of the id-numbering and
+# criterion expressions that both a full DenseState build and the batch
+# engine's delta absorption (BatchPlanner._absorb) must agree on bitwise —
+# keep them shared, or a warm carry silently diverges from a rebuilt one.
+
+
+def device_class_ids(devices) -> tuple[dict, np.ndarray]:
+    """Dense ids for the sorted device-class set + per-device id vector."""
+    class_id = {c: i for i, c in
+                enumerate(sorted({d.device_class for d in devices}))}
+    return class_id, np.array([class_id[d.device_class] for d in devices])
+
+
+def device_domain_ids(devices, levels) -> tuple[np.ndarray, dict]:
+    """(len(levels), n_dev) failure-domain token ids (first-seen order
+    per level, so appending devices never renumbers existing ids), plus
+    the tokens-per-level counts."""
+    arr = np.empty((len(levels), len(devices)), dtype=np.int64)
+    n_domains = {}
+    for li, lvl in enumerate(levels):
+        toks: dict[str, int] = {}
+        for i, d in enumerate(devices):
+            arr[li, i] = toks.setdefault(d.domain(lvl), len(toks))
+        n_domains[lvl] = len(toks)
+    return arr, n_domains
+
+
+def dst_count_ok(pool_counts: np.ndarray, ideal: np.ndarray,
+                 slack: float) -> np.ndarray:
+    """§3.1 destination ideal-count criterion, vectorized."""
+    return (np.abs(pool_counts + 1.0 - ideal)
+            <= np.abs(pool_counts - ideal) + slack)
 
 
 class DenseState:
@@ -75,9 +108,7 @@ class DenseState:
         self.cap = state.capacity_vector()
         self.used = state.used()
 
-        classes = sorted({d.device_class for d in devs})
-        self.class_id = {c: i for i, c in enumerate(classes)}
-        self.dev_class = np.array([self.class_id[d.device_class] for d in devs])
+        self.class_id, self.dev_class = device_class_ids(devs)
         # weighted ("in") devices; out devices are never legal destinations
         # (mirrors move_is_legal's out_osds check, independent of the
         # ideal-count criterion which stops excluding at count_slack >= 1)
@@ -85,15 +116,10 @@ class DenseState:
 
         # global domain ids per failure-domain level
         self.levels = ("osd", "host", "rack", "datacenter")
-        self.dev_domain = {}
-        self.n_domains = {}
-        for lvl in self.levels:
-            toks = {}
-            arr = np.empty(n_dev, dtype=np.int64)
-            for i, d in enumerate(devs):
-                arr[i] = toks.setdefault(d.domain(lvl), len(toks))
-            self.dev_domain[lvl] = arr
-            self.n_domains[lvl] = len(toks)
+        self.dev_domain_arr, self.n_domains = device_domain_ids(
+            devs, self.levels)
+        self.dev_domain = {lvl: self.dev_domain_arr[li]
+                           for li, lvl in enumerate(self.levels)}
 
         # pools
         pool_ids = sorted(state.pools)
@@ -170,8 +196,6 @@ class DenseState:
         # per-row Python peer-occupancy rebuild; maintained incrementally in
         # apply_row.  Each (pg, step) has exactly one failure-domain level
         # (the rule step's), so a single dense array suffices.
-        self.dev_domain_arr = np.stack([self.dev_domain[lvl]
-                                        for lvl in self.levels])
         self.occ_dev = np.zeros((n_pg, max_steps, n_dev), dtype=np.int16)
         pg_pool = np.array([pg[0] for pg in pgs])
         for p in pool_ids:
@@ -375,13 +399,14 @@ if _HAVE_JAX:
 # Planner entry point
 
 
-def balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
-                 record_trajectory: bool = False, use_jax: bool = False,
-                 pad_rows: int = 256, record_free_space: bool = True,
-                 engine: str | None = None):
+def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
+                  record_trajectory: bool = False, use_jax: bool = False,
+                  pad_rows: int = 256, record_free_space: bool = True,
+                  engine: str | None = None):
     """Drop-in replacement for :func:`repro.core.equilibrium.balance` with
     identical outputs (move-for-move) and 1–3 orders of magnitude less
-    planning time on paper-scale clusters.
+    planning time on paper-scale clusters.  Library-internal engine entry;
+    the public API is ``repro.core.planner.create_planner("equilibrium")``.
 
     ``engine`` selects among the three implementations (all bit-identical):
 
@@ -404,10 +429,10 @@ def balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                          "expected 'numpy', 'batch' or 'jax-legacy'")
     if engine == "batch":
         if _HAVE_JAX:
-            from .equilibrium_batch import balance_batch
-            return balance_batch(state, cfg,
-                                 record_trajectory=record_trajectory,
-                                 record_free_space=record_free_space)
+            from .equilibrium_batch import _balance_batch
+            return _balance_batch(state, cfg,
+                                  record_trajectory=record_trajectory,
+                                  record_free_space=record_free_space)
         engine = "numpy"                        # pragma: no cover
     use_legacy_jax = engine == "jax-legacy" and _HAVE_JAX
 
@@ -450,6 +475,22 @@ def balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 sources_tried=tried,
             ))
     return movements, records
+
+
+def balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
+                 record_trajectory: bool = False, use_jax: bool = False,
+                 pad_rows: int = 256, record_free_space: bool = True,
+                 engine: str | None = None):
+    """Deprecated: use ``create_planner("equilibrium")`` (numpy engine),
+    ``create_planner("equilibrium_batch")`` (``use_jax=True``) or
+    ``create_planner("equilibrium_jax_legacy")`` from
+    :mod:`repro.core.planner` — same move sequences, unified PlanResult."""
+    from ._compat import warn_deprecated
+    warn_deprecated("repro.core.equilibrium_jax.balance_fast",
+                    'create_planner("equilibrium")')
+    return _balance_fast(state, cfg, record_trajectory=record_trajectory,
+                         use_jax=use_jax, pad_rows=pad_rows,
+                         record_free_space=record_free_space, engine=engine)
 
 
 def _pick_jax(dense: DenseState, rows: np.ndarray, src_idx: int,

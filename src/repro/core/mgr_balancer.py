@@ -116,14 +116,15 @@ def _pool_round(state: ClusterState, pool_id: int, cfg: MgrBalancerConfig,
     return None
 
 
-def balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
-            record_trajectory: bool = False):
+def _balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
+             record_trajectory: bool = False):
     """Generate movements until every pool is count-balanced or aborts.
 
     Returns (movements, trajectory) where trajectory logs cluster metrics
     after each applied move when requested. ``state`` is mutated to the
     simulated target state, as both balancers plan against their own
-    projected state (§3.1).
+    projected state (§3.1).  Library-internal engine entry; the public
+    API is ``repro.core.planner.create_planner("mgr")``.
     """
     cfg = cfg or MgrBalancerConfig()
     movements: list[Movement] = []
@@ -153,3 +154,13 @@ def balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
         if not progressed:
             break
     return movements, trajectory
+
+
+def balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
+            record_trajectory: bool = False):
+    """Deprecated: use ``create_planner("mgr")`` from
+    :mod:`repro.core.planner` (same move sequences, unified PlanResult)."""
+    from ._compat import warn_deprecated
+    warn_deprecated("repro.core.mgr_balancer.balance",
+                    'create_planner("mgr")')
+    return _balance(state, cfg, record_trajectory)

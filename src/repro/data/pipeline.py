@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core import (ClusterState, Device, EquilibriumConfig,
                         PlacementRule, Pool)
-from repro.core.equilibrium_jax import balance_fast
+from repro.core.planner import create_planner
 
 
 @dataclass(frozen=True)
@@ -58,7 +58,9 @@ def assign_shards(shards: list[DataShard], host_capacities: list[float],
     state = build_cluster(devices, [pool], seed=seed, size_jitter=0.0)
     sizes = {(0, s.id): float(s.nbytes) for s in shards}
     state = ClusterState(devices, [pool], state.acting, sizes)
-    moves, _ = balance_fast(state, EquilibriumConfig(k=8, count_slack=1e9))
+    moves = create_planner(
+        "equilibrium",
+        cfg=EquilibriumConfig(k=8, count_slack=1e9)).plan(state).moves
     host_of = {pg[1]: state.idx(osds[0])
                for pg, osds in state.acting.items()}
     return ShardAssignment(host_of, float(sum(m.size for m in moves)),

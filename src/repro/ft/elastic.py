@@ -18,7 +18,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import ClusterState, Device, EquilibriumConfig, Movement
-from repro.core.equilibrium_jax import balance_fast
+from repro.core.planner import create_planner
 
 
 @dataclass
@@ -72,7 +72,7 @@ def plan_rescale(state: ClusterState, add_devices: list[Device] = (),
     #    the whole plan — empty joiners pull the largest shards first)
     final = ClusterState(devices, list(state.pools.values()),
                          work.acting, work.shard_sizes)
-    moves, _ = balance_fast(final, cfg)
+    moves = create_planner("equilibrium", cfg=cfg).plan(final).moves
     movements += moves
 
     moved = float(sum(m.size for m in movements))

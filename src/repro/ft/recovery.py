@@ -15,7 +15,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import ClusterState, EquilibriumConfig, Movement
-from repro.core.equilibrium_jax import balance_fast
+from repro.core.planner import create_planner
 
 
 @dataclass
@@ -71,7 +71,7 @@ def plan_recovery(state: ClusterState, failed_osd: int,
         surv_state = ClusterState(survivors, list(state.pools.values()),
                                   state.acting, state.shard_sizes)
         cfg = cfg or EquilibriumConfig(k=8)
-        moves, _ = balance_fast(surv_state, cfg)
+        moves = create_planner("equilibrium", cfg=cfg).plan(surv_state).moves
         for mv in moves:
             state.apply(mv)
     return RecoveryPlan(re_reps, moves, unrecoverable)

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import (ClusterState, Device, EquilibriumConfig, Movement,
                         PlacementRule, Pool)
-from repro.core.equilibrium_jax import balance_fast
+from repro.core.planner import create_planner
 
 
 @dataclass(frozen=True)
@@ -131,7 +131,7 @@ class PagedKVPool:
         # per-chip sequence-count ideal is meaningless for serving; disable
         # the count criterion with a generous slack, keep variance descent.
         cfg = cfg or EquilibriumConfig(k=8, count_slack=1e9)
-        movements, _ = balance_fast(state, cfg)
+        movements = create_planner("equilibrium", cfg=cfg).plan(state).moves
         plan = []
         for mv in movements:
             sid = seq_of_pg[mv.pg[1]]

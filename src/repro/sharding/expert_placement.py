@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core import (ClusterState, Device, EquilibriumConfig, Movement,
                         PlacementRule, Pool, build_cluster)
-from repro.core.equilibrium_jax import balance_fast
+from repro.core.planner import create_planner
 
 
 @dataclass
@@ -102,7 +102,8 @@ def rebalance(placement: ExpertPlacement,
     """Equilibrium pass: explicit expert-replica migrations, fullest chip
     drained first, host-disjointness preserved, load variance minimized."""
     cfg = cfg or EquilibriumConfig(k=16)
-    movements, _ = balance_fast(placement.state, cfg)
+    movements = create_planner("equilibrium",
+                               cfg=cfg).plan(placement.state).moves
     return movements
 
 

@@ -2,15 +2,24 @@
 
 The paper's evaluation is a set of frozen snapshots; this package makes
 the cluster move — growth, expansion, failures, throttled backfill — and
-ticks any registered balancer against the moving target.  See
+ticks any planner registered with :mod:`repro.core.planner` against the
+moving target (``BALANCERS`` mirrors that registry).  See
 ``benchmarks/bench_scenarios.py`` for the head-to-head harness.
 """
 
-from .engine import BALANCERS, ScenarioEngine, SimConfig
+from .engine import ScenarioEngine, SimConfig
 from .events import (DeviceAdd, DeviceFail, DeviceOut, Event, HostAdd,
                      PoolCreate, PoolGrowth, RebalanceTick)
 from .metrics import MetricsCollector
 from .scenarios import SCENARIOS, Scenario, register, run_scenario
+
+
+def __getattr__(name: str):
+    # live view of the planner registry (see engine.__getattr__)
+    if name == "BALANCERS":
+        from . import engine
+        return engine.BALANCERS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "BALANCERS", "ScenarioEngine", "SimConfig", "Event", "PoolGrowth",

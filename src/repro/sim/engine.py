@@ -16,10 +16,15 @@ Semantics mirror how Ceph actually executes placement changes:
   :class:`~repro.core.simulate.MovementThrottle` (max concurrent
   backfills + per-device recovery bandwidth), and all utilization metrics
   are sampled from **physical** occupancy.
-* The ``equilibrium_batch`` balancer holds a
-  :class:`~repro.core.equilibrium_batch.BatchPlanner` across ticks: on
-  quiet ticks (no event mutated the state) it resumes planning from its
-  device-resident carry instead of rebuilding — the warm-start path.
+* Balancers are resolved through the planner registry
+  (:mod:`repro.core.planner`) — any registered :class:`Planner` can tick,
+  with no per-balancer dispatch here.  The planner instance persists
+  across ticks, so warm planners (``equilibrium_batch``) resume from
+  their device-resident carry; because every state mutation this engine
+  performs goes through a :class:`~repro.core.cluster.ClusterState`
+  mutator, the typed :class:`~repro.core.cluster.ClusterDelta` stream
+  reaches the planner automatically and small mutations (pool growth,
+  device adds) are absorbed without a dense rebuild.
 
 Determinism: one seeded generator drives every random draw (re-placement
 destinations, CRUSH subset selection, new-pool jitter) in a fixed order,
@@ -36,14 +41,21 @@ import numpy as np
 from ..core.cluster import ClusterState, Device, Movement, PlacementRule, Pool
 from ..core.crush import place_pg
 from ..core.equilibrium import EquilibriumConfig
-from ..core.mgr_balancer import MgrBalancerConfig, balance as mgr_balance
+from ..core.mgr_balancer import MgrBalancerConfig
+from ..core.planner import (Planner, available_planners, create_planner,
+                            get_planner_spec)
 from ..core.simulate import MovementThrottle, ThrottleConfig
 from .events import (DeviceAdd, DeviceFail, DeviceOut, Event, HostAdd,
                      PoolCreate, PoolGrowth, RebalanceTick)
 from .metrics import MetricsCollector
 
-#: Registered balancers a scenario can tick.
-BALANCERS = ("equilibrium", "equilibrium_batch", "mgr", "none")
+
+def __getattr__(name: str):
+    # BALANCERS is a live view of the planner registry (PEP 562), so
+    # third-party planners registered after import still appear.
+    if name == "BALANCERS":
+        return available_planners()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclass
@@ -68,11 +80,11 @@ class ScenarioEngine:
     """Run one timeline against one cluster with one balancer."""
 
     def __init__(self, state: ClusterState, events: list[Event],
-                 cfg: SimConfig | None = None):
+                 cfg: SimConfig | None = None,
+                 planner: Planner | None = None):
         self.cfg = cfg or SimConfig()
-        if self.cfg.balancer not in BALANCERS:
-            raise ValueError(f"unknown balancer {self.cfg.balancer!r}: "
-                             f"expected one of {BALANCERS}")
+        self._planner = planner if planner is not None \
+            else self._make_planner(self.cfg)
         self.state = state
         self.growth = [ev for ev in events if isinstance(ev, PoolGrowth)]
         self.timeline: dict[int, list[Event]] = {}
@@ -82,11 +94,27 @@ class ScenarioEngine:
         self.throttle = MovementThrottle(self.cfg.throttle)
         self.metrics = MetricsCollector(self.cfg.fullness_threshold)
         self.rng = np.random.default_rng((self.cfg.seed, 0x51D3))
-        self._planner = None                # warm BatchPlanner across ticks
         self._planned_moves = 0
         self._degraded = 0
         self._next_osd = 1 + max((d.id for d in state.devices), default=-1)
         self._expansions = 0
+
+    @staticmethod
+    def _make_planner(cfg: SimConfig) -> Planner:
+        """Resolve ``cfg.balancer`` through the planner registry.
+
+        The planner's own config comes from the SimConfig field its
+        registration names (``sim_config_attr``); ``chunk`` is aligned to
+        the per-tick budget so warm planners never hold an overshoot
+        stash across ticks (a non-empty stash forces delta absorption to
+        fall back to a rebuild).  Unaccepted kwargs are dropped by
+        :func:`~repro.core.planner.create_planner`.
+        """
+        spec = get_planner_spec(cfg.balancer)    # ValueError when unknown
+        kwargs = {"chunk": max(1, cfg.moves_per_tick)}
+        if spec.sim_config_attr is not None:
+            kwargs["cfg"] = getattr(cfg, spec.sim_config_attr)
+        return create_planner(cfg.balancer, **kwargs)
 
     # -- main loop -----------------------------------------------------------
 
@@ -158,26 +186,11 @@ class ScenarioEngine:
         if cap is not None and self.throttle.backlog_moves >= cap:
             return
         budget = ev.max_moves if ev.max_moves >= 0 else self.cfg.moves_per_tick
-        name = self.cfg.balancer
-        if name == "none" or budget <= 0:
+        if budget <= 0:
             return
-        from ..core.equilibrium_batch import _HAVE_JAX
-        if name == "equilibrium_batch" and not _HAVE_JAX:
-            name = "equilibrium"    # pragma: no cover - numpy fallback,
-        if name == "mgr":           # same move sequences
-            mcfg = dataclasses.replace(self.cfg.mgr, max_moves=budget)
-            moves, _ = mgr_balance(self.state, mcfg)
-        elif name == "equilibrium":
-            from ..core.equilibrium_jax import balance_fast
-            ecfg = dataclasses.replace(self.cfg.equilibrium, max_moves=budget)
-            moves, _ = balance_fast(self.state, ecfg, engine="numpy")
-        else:                                # equilibrium_batch, warm-started
-            if self._planner is None:
-                from ..core.equilibrium_batch import BatchPlanner
-                self._planner = BatchPlanner(self.state, self.cfg.equilibrium)
-            moves, _ = self._planner.plan(max_moves=budget)
-        self._planned_moves += len(moves)
-        self.throttle.enqueue(moves)
+        result = self._planner.plan(self.state, budget=budget)
+        self._planned_moves += len(result.moves)
+        self.throttle.enqueue(result.moves)
 
     # -- placement surgery ---------------------------------------------------
 

@@ -1,0 +1,24 @@
+"""API-surface guards: no library code calls a deprecated balancer entry
+point (everything goes through repro.core.planner), and the registry is
+the single complete list of balancers the sim/benchmarks accept."""
+
+import pathlib
+import subprocess
+import sys
+
+from repro.core import available_planners
+from repro.sim import BALANCERS
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_no_deprecated_entry_points_inside_src():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_deprecated.py"),
+         "--root", str(REPO / "src")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_sim_balancers_mirror_registry():
+    assert BALANCERS == available_planners()

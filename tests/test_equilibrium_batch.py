@@ -239,14 +239,19 @@ def test_warm_start_converged_tick_is_noop():
 
 
 def test_warm_start_rebuilds_after_external_mutation():
-    """An external mutation (pool growth) between ticks must invalidate the
-    carry: exactly one extra rebuild, and the continuation equals a cold
-    plan from the mutated state."""
+    """Pool growth arriving while the planner holds an overshoot stash
+    (budget 5 < chunk 64: the device planned past the budget) cannot be
+    absorbed — the stashed continuation was planned against the pre-growth
+    state — so the carry must be rebuilt: exactly one extra rebuild, and
+    the continuation equals a cold plan from the mutated state.  (With an
+    empty stash the same growth is absorbed without any rebuild — see
+    tests/test_planner_api.py.)"""
     from repro.core.equilibrium_batch import BatchPlanner, dense_rebuild_count
 
     state = small_test_cluster()
     planner = BatchPlanner(state, EquilibriumConfig())
     planner.plan(max_moves=5)
+    assert planner._stash, "test premise: budget < chunk leaves a stash"
     state.grow_pool(0, 2.0 * 1024.0 ** 4)
     cold, _ = balance_batch(state.copy(), EquilibriumConfig())
     before = dense_rebuild_count()

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Fail if any module inside ``src/`` calls a deprecated balancer entry
+point.
+
+The four pre-protocol entry points (``equilibrium.balance``,
+``equilibrium_jax.balance_fast``, ``equilibrium_batch.balance_batch``,
+``mgr_balancer.balance``, plus their ``repro.core`` re-export aliases)
+survive as shims for external callers, but library code must go through
+:mod:`repro.core.planner`.  This walks the AST of every file under
+``src/`` tracking *imports* — a name only counts as deprecated if it was
+imported (under any alias) from one of the shim homes, and attribute
+calls through an imported shim module (``equilibrium.balance(...)``) are
+caught too.  Run by CI's api-smoke job and by
+tests/test_api_surface.py.
+
+    python tools/check_deprecated.py [--root PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+#: deprecated function names exported by each home module (keyed by the
+#: module's last dotted component, which also covers relative imports)
+HOME_EXPORTS = {
+    "equilibrium": {"balance"},
+    "equilibrium_jax": {"balance_fast"},
+    "equilibrium_batch": {"balance_batch"},
+    "mgr_balancer": {"balance"},
+    # repro.core re-exports the shims under these names
+    "core": {"equilibrium_balance", "mgr_balance", "balance_fast",
+             "balance_batch"},
+}
+
+#: modules allowed to reference the deprecated names: their home modules
+#: (which define them) and the package re-exporting them
+ALLOWED = {
+    "repro/core/equilibrium.py",
+    "repro/core/equilibrium_jax.py",
+    "repro/core/equilibrium_batch.py",
+    "repro/core/mgr_balancer.py",
+    "repro/core/__init__.py",
+}
+
+
+def _module_key(module: str | None) -> str | None:
+    return module.rsplit(".", 1)[-1] if module else None
+
+
+def _check_file(path: pathlib.Path, rel: str) -> list[str]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    deprecated_names: dict[str, str] = {}   # local alias -> original name
+    shim_modules: dict[str, str] = {}       # local dotted path -> module key
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            # module is None for "from . import x" — key stays "" and
+            # only the shim-module branch below can match
+            key = _module_key(node.module) or ""
+            exports = HOME_EXPORTS.get(key, set())
+            for alias in node.names:
+                local = alias.asname or alias.name
+                if alias.name in exports and alias.name != "core":
+                    # from repro.core.equilibrium import balance [as b]
+                    deprecated_names[local] = alias.name
+                elif (key in ("core", "repro", "")
+                        and alias.name in HOME_EXPORTS):
+                    # from repro.core import equilibrium [as eq] /
+                    # from repro import core / from . import equilibrium
+                    # / from .. import core — a shim *module* binding
+                    shim_modules[local] = alias.name
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                key = _module_key(alias.name)
+                if key in HOME_EXPORTS and key != "repro":
+                    # import repro.core.equilibrium [as eq]: the call
+                    # path is the asname or the full dotted name
+                    shim_modules[alias.asname or alias.name] = key
+
+    violations = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in deprecated_names:
+            violations.append(
+                f"{rel}:{node.lineno}: call to deprecated entry point "
+                f"{deprecated_names[fn.id]!r} (as {fn.id!r}); "
+                f"use repro.core.planner")
+        elif isinstance(fn, ast.Attribute):
+            # <imported shim module>.balance(...) via its dotted path
+            parts = []
+            base = fn.value
+            while isinstance(base, ast.Attribute):
+                parts.append(base.attr)
+                base = base.value
+            if isinstance(base, ast.Name):
+                parts.append(base.id)
+                dotted = ".".join(reversed(parts))
+                key = shim_modules.get(dotted)
+                if key and fn.attr in HOME_EXPORTS.get(key, set()):
+                    violations.append(
+                        f"{rel}:{node.lineno}: call to deprecated entry "
+                        f"point {dotted}.{fn.attr}; use repro.core.planner")
+    return violations
+
+
+def check(root: pathlib.Path) -> list[str]:
+    violations = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel in ALLOWED:
+            continue
+        violations.extend(_check_file(path, rel))
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="src",
+                    help="directory to scan (default: src)")
+    args = ap.parse_args()
+    violations = check(pathlib.Path(args.root))
+    for v in violations:
+        print(v, file=sys.stderr)
+    if violations:
+        print(f"{len(violations)} deprecated-entry-point call(s) in "
+              f"{args.root}/", file=sys.stderr)
+        return 1
+    print(f"no deprecated entry-point calls under {args.root}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
