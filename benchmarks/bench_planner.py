@@ -120,20 +120,45 @@ def balance_seed_jax(state, cfg):
 # ---------------------------------------------------------------------------
 
 
-def _registry_engine(name):
-    """Fresh planner per call (cold start), through the unified API."""
+def _registry_engine(name, **kwargs):
+    """Fresh planner per call (cold start), through the unified API.
+    Returns (moves, stats) — stats carries the convergence-tail
+    instrumentation (sources_tried histogram, tail wall-time share)."""
     def run(state, cfg):
-        result = create_planner(name, cfg=cfg).plan(state)
-        return result.moves, result.records
+        result = create_planner(name, cfg=cfg, **kwargs).plan(state)
+        return result.moves, result.stats
     return run
 
 
+def _seed_engine(state, cfg):
+    moves, _ = balance_seed_jax(state, cfg)
+    return moves, {}
+
+
+#: ``batch-nocache`` disables the PR-4 cross-move legality cache — its
+#: tail share vs ``batch`` is the direct measure of the cache's win
 ENGINES = (
-    ("seed-jax", balance_seed_jax),
+    ("seed-jax", _seed_engine),
     ("jax-legacy", _registry_engine("equilibrium_jax_legacy")),
     ("numpy", _registry_engine("equilibrium")),
+    ("batch-nocache", _registry_engine("equilibrium_batch",
+                                       legality_cache=False)),
     ("batch", _registry_engine("equilibrium_batch")),
 )
+
+
+def _tail_derived(stats: dict) -> str:
+    """Compact convergence-tail summary for the derived field."""
+    hist = stats.get("sources_tried_hist")
+    if not hist:
+        return ""
+    total = sum(hist.values())
+    tail = stats.get("tail_moves", 0)
+    secs = stats.get("moves_seconds", 0.0)
+    share = stats.get("tail_seconds", 0.0) / secs if secs > 0 else 0.0
+    full = ",".join(f"{t}:{hist[t]}" for t in sorted(hist, key=int))
+    return (f";tail_moves={tail}/{total};tail_time_share={share:.2f};"
+            f"tried_hist={full}")
 
 
 def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
@@ -142,18 +167,20 @@ def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
     per_s = {}
     sequences = {}
     compile_s = {}
+    tail = {}
     for label, fn in ENGINES:
         t0 = time.perf_counter()
         fn(initial.copy(), EquilibriumConfig(max_moves=warm))
         compile_s[label] = time.perf_counter() - t0
         t0 = time.perf_counter()
-        mv, _ = fn(initial.copy(), EquilibriumConfig(max_moves=cap))
+        mv, stats = fn(initial.copy(), EquilibriumConfig(max_moves=cap))
         dt = time.perf_counter() - t0
         per_s[label] = len(mv) / max(dt, 1e-9)
+        tail[label] = _tail_derived(stats)
         sequences[label] = [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in mv]
-        print(f"  {tag}.{label:10s}: {len(mv)} moves, "
+        print(f"  {tag}.{label:13s}: {len(mv)} moves, "
               f"{1e3 * dt / max(len(mv), 1):.2f} ms/move "
-              f"({per_s[label]:.1f} moves/s)")
+              f"({per_s[label]:.1f} moves/s){tail[label]}")
     identical = all(sequences[l] == sequences["batch"] for l, _ in ENGINES)
     for label, _ in ENGINES:
         speedup = per_s[label] / per_s["seed-jax"]
@@ -163,7 +190,40 @@ def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
             "derived": (f"moves_per_s={per_s[label]:.1f};"
                         f"speedup_vs_seed={speedup:.1f}x;"
                         f"identical={identical};"
-                        f"warmup_s={compile_s[label]:.1f}"),
+                        f"warmup_s={compile_s[label]:.1f}"
+                        f"{tail[label]}"),
+            "git_sha": sha,
+        })
+    return rows
+
+
+#: the cache-vs-nocache pair from ENGINES — same construction, so the
+#: tail rows benchmark exactly the planners the throughput rows do
+TAIL_ENGINES = tuple((label, fn) for label, fn in ENGINES
+                     if label.startswith("batch"))
+
+
+def bench_tail(initial, tag: str, warm: int) -> list[dict]:
+    """Convergence-tail benchmark: run to *full* convergence, where
+    ``sources_tried > 1`` moves dominate wall time (97% of it at cluster-B
+    scale), and compare the batch engine with and without the PR-4
+    cross-move legality cache — the nocache/cache delta is the direct
+    measure of the cache's tail win."""
+    sha = git_sha()
+    rows = []
+    for label, fn in TAIL_ENGINES:
+        fn(initial.copy(), EquilibriumConfig(max_moves=warm))
+        t0 = time.perf_counter()
+        mv, stats = fn(initial.copy(), EquilibriumConfig())
+        dt = time.perf_counter() - t0
+        per_s = len(mv) / max(dt, 1e-9)
+        print(f"  tail.{tag}.{label:13s}: {len(mv)} moves to convergence, "
+              f"{dt:.1f}s ({per_s:.1f} moves/s){_tail_derived(stats)}")
+        rows.append({
+            "name": f"planner.tail.{tag}.{label}",
+            "us_per_call": 1e6 / max(per_s, 1e-9),
+            "derived": (f"moves_per_s={per_s:.1f};converged={len(mv)}"
+                        f"{_tail_derived(stats)}"),
             "git_sha": sha,
         })
     return rows
@@ -187,6 +247,11 @@ def main() -> None:
         print(f"cluster B x{scale}: {initial.n_devices} OSDs, "
               f"{len(initial.acting)} PGs (built {time.perf_counter()-t0:.0f}s)")
         rows += bench_cluster(initial, f"B{scale}x", cap=cap, warm=warm)
+        if scale == 1 and not args.quick:
+            rows += bench_tail(initial, "B1x", warm=warm)
+    if args.quick:
+        from repro.core.clustergen import cluster_f
+        rows += bench_tail(cluster_f(), "F", warm=warm)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows -> {args.out}")

@@ -12,6 +12,7 @@ from .cluster import (ClusterDelta, ClusterState, Device, DeviceAddDelta,
                       RuleStep, TiB)
 from .crush import build_cluster, place_pg
 from .clustergen import PAPER_CLUSTERS, small_test_cluster
+from .legality import LegalityState
 from .equilibrium import EquilibriumConfig, balance as equilibrium_balance
 from .equilibrium_batch import BatchPlanner, balance_batch
 from .equilibrium_jax import DenseState, balance_fast
@@ -35,4 +36,6 @@ __all__ = [
     "create_planner", "get_planner_spec", "available_planners",
     "ClusterDelta", "MovementDelta", "PoolGrowthDelta", "DeviceAddDelta",
     "DeviceOutDelta", "PoolCreateDelta",
+    # legality core (PR 4)
+    "LegalityState",
 ]

@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from . import legality
 from .cluster import ClusterState, Movement, PGId
 
 
@@ -60,41 +61,44 @@ def _count_criterion(state: ClusterState, pg: PGId, src_idx: int, dst_idx: int,
         ideal_cache[pool_id] = state.ideal_shard_count(state.pools[pool_id])
     ideal = ideal_cache[pool_id]
     counts = state.pool_counts[pool_id]
-    src_old = abs(counts[src_idx] - ideal[src_idx])
-    src_new = abs(counts[src_idx] - 1 - ideal[src_idx])
-    dst_old = abs(counts[dst_idx] - ideal[dst_idx])
-    dst_new = abs(counts[dst_idx] + 1 - ideal[dst_idx])
-    return (src_new <= src_old + slack) and (dst_new <= dst_old + slack)
+    return bool(legality.src_count_ok(counts[src_idx], ideal[src_idx], slack)
+                and legality.dst_count_ok(counts[dst_idx], ideal[dst_idx],
+                                          slack))
 
 
 class _IncrementalVariance:
-    """O(1)-per-move tracker of utilization mean/second-moment."""
+    """O(1)-per-move tracker of utilization mean/second-moment.
+
+    Acceptance and bookkeeping both go through the shared legality-core
+    expressions ((used ± size) / cap, the two maintained moments), so the
+    faithful planner's decisions are bit-identical to the vectorized
+    engines *by construction*, not by parallel maintenance."""
 
     def __init__(self, used: np.ndarray, cap: np.ndarray):
         self.cap = cap
+        self.used = used.astype(np.float64, copy=True)
         self.util = used / cap
         self.sum = float(self.util.sum())
         self.sumsq = float((self.util**2).sum())
         self.n = used.shape[0]
 
     def variance(self) -> float:
-        return self.sumsq / self.n - (self.sum / self.n) ** 2
+        return legality.variance_from_moments(self.sum, self.sumsq, self.n)
 
-    def delta(self, src_idx: int, dst_idx: int, size: float) -> float:
-        u_s, u_d = self.util[src_idx], self.util[dst_idx]
-        v_s = u_s - size / self.cap[src_idx]
-        v_d = u_d + size / self.cap[dst_idx]
-        dsum = (v_s - u_s) + (v_d - u_d)
-        dsq = (v_s**2 - u_s**2) + (v_d**2 - u_d**2)
-        new_var = (self.sumsq + dsq) / self.n - ((self.sum + dsum) / self.n) ** 2
-        return new_var - self.variance()
+    def improves(self, src_idx: int, dst_idx: int, size: float,
+                 min_variance_delta: float) -> bool:
+        return bool(legality.variance_improves(
+            self.used[src_idx], self.used[dst_idx], self.cap[src_idx],
+            self.cap[dst_idx], self.util[src_idx], self.util[dst_idx],
+            size, self.sum, self.sumsq, self.n, min_variance_delta))
 
     def commit(self, src_idx: int, dst_idx: int, size: float) -> None:
-        for i, s in ((src_idx, -size), (dst_idx, +size)):
-            u_old = self.util[i]
-            u_new = u_old + s / self.cap[i]
-            self.sum += u_new - u_old
-            self.sumsq += u_new**2 - u_old**2
+        self.used[src_idx] -= size
+        self.used[dst_idx] += size
+        for i in (src_idx, dst_idx):        # source first, like apply_row
+            u_new = self.used[i] / self.cap[i]
+            self.sum += u_new - self.util[i]
+            self.sumsq += u_new**2 - self.util[i] ** 2
             self.util[i] = u_new
 
 
@@ -107,7 +111,7 @@ def plan_one_move(state: ClusterState, cfg: EquilibriumConfig,
     cap = state.capacity_vector()
     used = state.used()
     util = used / cap
-    src_order = np.argsort(-util, kind="stable")[: cfg.k]
+    src_order = legality.fullest_first(util)[: cfg.k]
     dst_order = np.argsort(util, kind="stable")
     ideal_cache: dict[int, np.ndarray] = {}
 
@@ -131,33 +135,81 @@ def plan_one_move(state: ClusterState, cfg: EquilibriumConfig,
                 if not _count_criterion(state, pg, src_idx, dst_i,
                                         ideal_cache, cfg.count_slack):
                     continue
-                if tracker.delta(src_idx, dst_i, size) >= -cfg.min_variance_delta:
+                if not tracker.improves(src_idx, dst_i, size,
+                                        cfg.min_variance_delta):
                     continue        # must strictly reduce variance
                 return (Movement(pg, slot, src_osd, dst_osd, size), tried)
     return None, len(src_order)
 
 
+def _tail_stats(stats_out: dict | None):
+    """Mutable convergence-tail accumulator shared by the host-loop
+    engines: a ``sources_tried`` histogram plus the selection/apply
+    wall-time split, written into ``stats_out`` (PlanResult.stats)."""
+    return {"hist": {}, "select": 0.0, "apply": 0.0, "tail": 0.0,
+            "terminal": 0.0, "out": stats_out}
+
+
+def _tail_record(acc: dict, tried: int, select_s: float,
+                 apply_s: float) -> None:
+    acc["hist"][tried] = acc["hist"].get(tried, 0) + 1
+    acc["select"] += select_s
+    acc["apply"] += apply_s
+    if tried > 1:
+        acc["tail"] += select_s + apply_s
+
+
+def _tail_terminal(acc: dict, seconds: float) -> None:
+    """Account the final fruitless scan (every source walked, no legal
+    move) — by definition the most tail-like work in a convergence run,
+    so it belongs in the tail share."""
+    acc["select"] += seconds
+    acc["tail"] += seconds
+    acc["terminal"] += seconds
+
+
+def _tail_flush(acc: dict) -> None:
+    if acc["out"] is None:
+        return
+    hist = acc["hist"]
+    acc["out"].update(
+        sources_tried_hist={str(t): hist[t] for t in sorted(hist)},
+        tail_moves=sum(c for t, c in hist.items() if t > 1),
+        tail_seconds=acc["tail"],
+        terminal_scan_seconds=acc["terminal"],
+        selection_seconds=acc["select"], apply_seconds=acc["apply"],
+        moves_seconds=acc["select"] + acc["apply"])
+
+
 def _balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
-             record_trajectory: bool = False, record_free_space: bool = True):
+             record_trajectory: bool = False, record_free_space: bool = True,
+             stats_out: dict | None = None):
     """Run Equilibrium to convergence on ``state`` (mutated in place).
 
     Returns (movements, records) — ``records`` carries per-move metrics
     (variance, free space, planning time, sources tried) used by the
-    Fig 4/5/6 benchmarks.  Library-internal engine entry; the public API
-    is ``repro.core.planner.create_planner("equilibrium_faithful")``.
+    Fig 4/5/6 benchmarks; ``stats_out`` (optional) receives the
+    convergence-tail instrumentation (sources_tried histogram,
+    selection-vs-apply wall split).  Library-internal engine entry; the
+    public API is ``repro.core.planner.create_planner
+    ("equilibrium_faithful")``.
     """
     cfg = cfg or EquilibriumConfig()
     tracker = _IncrementalVariance(state.used(), state.capacity_vector())
     movements: list[Movement] = []
     records: list[MoveRecord] = []
+    acc = _tail_stats(stats_out)
     while len(movements) < cfg.max_moves:
         t0 = time.perf_counter()
         mv, tried = plan_one_move(state, cfg, tracker)
         dt = time.perf_counter() - t0
         if mv is None:
+            _tail_terminal(acc, dt)
             break
+        t1 = time.perf_counter()
         tracker.commit(state.idx(mv.src_osd), state.idx(mv.dst_osd), mv.size)
         state.apply(mv)
+        _tail_record(acc, tried, dt, time.perf_counter() - t1)
         movements.append(mv)
         if record_trajectory:
             records.append(MoveRecord(
@@ -168,6 +220,7 @@ def _balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 planning_seconds=dt,
                 sources_tried=tried,
             ))
+    _tail_flush(acc)
     return movements, records
 
 

@@ -65,9 +65,12 @@ from functools import partial
 
 import numpy as np
 
-from .cluster import (ClusterDelta, ClusterState, DeviceAddDelta, Movement,
-                      PoolGrowthDelta)
+from . import legality
+from .cluster import (ClusterDelta, ClusterState, DeviceAddDelta,
+                      DeviceOutDelta, Movement, MovementDelta,
+                      PoolCreateDelta, PoolGrowthDelta)
 from .equilibrium import EquilibriumConfig, MoveRecord
+from .legality import LegalityState
 
 try:  # pragma: no cover - JAX is always present in this repo
     import jax
@@ -132,15 +135,32 @@ def _shift_insert(arr, pos, value):
 # The jitted chunk: select + apply up to `m` moves entirely on-device
 
 
-@partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend"))
+@partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached"))
 def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
-                k, kb, rb, m, backend):
+                k, kb, rb, m, backend, cached):
     """Run up to ``m`` planning steps on-device.
 
     dyn   = (used, util, util_sum, util_sumsq, acting, pool_counts,
-             dst_ok, rows_on, nrows, order)         — mutated functionally
+             dst_ok, rows_on, nrows, order,
+             cache_dev, cache_ok, cache_clean)      — mutated functionally
     const = (cap, dev_class, dev_in, dev_domain, sh_size, sh_pg, sh_pool,
              sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal)
+
+    ``cache_*`` is the cross-move incremental legality cache (enabled by
+    the static ``cached`` flag): per top-k source rank, the *static* half
+    of the legality tile — class match ∧ ¬PG-member ∧ failure-domain free,
+    the part whose inputs only change when a move touches the tile's
+    device or the moved PG — tagged with the device it was computed for
+    (``cache_dev``) and per-row-block validity bits (``cache_clean``).
+    ``apply_move`` repairs the cache instead of discarding it: only the
+    two touched devices' tiles and the row-blocks holding a shard of the
+    moved PG are invalidated, so the convergence-tail walk (sources_tried
+    ≫ 1 re-scanning the same fruitless sources every move) re-evaluates
+    cheap per-move criteria only.  The dynamic half (capacity fit, count
+    criteria, the exact variance delta, the emptiest-first cutoff) is
+    recomputed every tile — its inputs legitimately change every move.
+    Rank-keyed entries whose device changed (the maintained order shifted)
+    simply miss and recompute; correctness never depends on a hit.
 
     Returns (dyn', done, overflow, moves (m, 4) int32) where each move row
     is (shard_row, src_idx, dst_idx, sources_tried) or -1 sentinels.
@@ -150,33 +170,32 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
     n_dev = cap.shape[0]
     n_slots = dyn[4].shape[1]
     r_cap = dyn[7].shape[1]
+    n_blocks = r_cap // rb              # _round_cap keeps r_cap % rb == 0
     n_f = float(n_dev)
     n_sb = -(-k // kb)
     k_pad = n_sb * kb
     dev_iota = jnp.arange(n_dev, dtype=jnp.int32)
-    cap_lim = cap * (1.0 - headroom)         # loop-invariant, hoisted
+    cap_lim = legality.capacity_limit(cap, headroom)  # loop-invariant
 
     def select_one(dyn, active):
         """One §3.1 planning step: walk (source-block, row-block) tiles of
         the batched legality tensor until the faithful winner is decided."""
         used, util, us, usq, acting, pool_counts, dst_ok, \
-            rows_on, nrows, order = dyn
+            rows_on, nrows, order, c_dev, c_ok, c_clean = dyn
         src_order = order[:k]       # maintained == argsort(-util, stable)
         if k_pad > k:   # pad to a source-block multiple; masked from wins
             src_order = jnp.pad(src_order, (0, k_pad - k))
         rows_k = rows_on[src_order]         # (k_pad, r_cap), faithful order
         n_rows_k = jnp.where(jnp.arange(k_pad) < k, nrows[src_order], 0)
-        old_var = usq / n_f - (us / n_f) ** 2
 
-        def eval_tile(sb, c):
-            """(kb, rb, n_dev) legality+criteria slab for tile (sb, c)."""
+        def eval_static(sb, c):
+            """(kb, rb, n_dev) static legality for tile (sb, c): class
+            match ∧ ¬member ∧ failure-domain free — everything derived
+            from the acting table and device registry only, i.e. the
+            cacheable half."""
             blk = lax.dynamic_slice(rows_k, (sb * kb, c * rb), (kb, rb))
-            src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
             r = jnp.clip(blk, 0)
-            size = jnp.where(blk >= 0, sh_size[r], 0.0)          # (kb, rb)
-            real = size > 0.0
             pg = sh_pg[r]
-            pool = sh_pool[r]
             lvl = sh_level[r]
             slot = sh_slot[r]
             sbase = sh_sbase[r]
@@ -198,38 +217,76 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
                 bad |= a_j[..., None] == dev_iota                # member
                 bad |= in_step[..., None] & (dom == peer_dom[..., None])
             cls = sh_class[r]
-            class_ok = ((cls[..., None] < 0)
-                        | (dev_class[None, None, :] == cls[..., None]))
-            cap_ok = used[None, None, :] + size[..., None] <= cap_lim
+            return legality.class_ok(cls[..., None],
+                                     dev_class[None, None, :]) & ~bad
+
+        def eval_dyn(sb, c):
+            """(kb, rb, n_dev) per-move criteria for tile (sb, c): the
+            half whose inputs (used/util/counts/order) change every move
+            and is therefore never cached."""
+            blk = lax.dynamic_slice(rows_k, (sb * kb, c * rb), (kb, rb))
+            src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
+            r = jnp.clip(blk, 0)
+            size = jnp.where(blk >= 0, sh_size[r], 0.0)          # (kb, rb)
+            real = size > 0.0
+            pool = sh_pool[r]
+            cap_ok = legality.capacity_ok(used[None, None, :], cap_lim,
+                                          size[..., None])
             crit = dst_ok[pool]                                  # (kb, rb, n)
             cnt_s = pool_counts[pool, src_b[:, None]]            # (kb, rb)
             idl_s = ideal[pool, src_b[:, None]]
-            src_ok = (jnp.abs(cnt_s - 1.0 - idl_s)
-                      <= jnp.abs(cnt_s - idl_s) + slack)
-            # exact variance delta (same expressions as DenseState)
+            src_ok = legality.src_count_ok(cnt_s, idl_s, slack)
+            # exact variance delta (the one legality-core expression)
             u_s = util[src_b][:, None, None]
-            v_s = (used[src_b][:, None] - size)[..., None] / cap[src_b][:, None, None]
-            v_d = (used[None, None, :] + size[..., None]) / cap[None, None, :]
-            dsum = (v_s - u_s) + (v_d - util[None, None, :])
-            dsq = (v_s ** 2 - u_s ** 2) + (v_d ** 2 - util[None, None, :] ** 2)
-            new_var = (usq + dsq) / n_f - ((us + dsum) / n_f) ** 2
-            var_ok = (new_var - old_var) < -min_dvar
+            var_ok = legality.variance_improves(
+                used[src_b][:, None, None], used[None, None, :],
+                cap[src_b][:, None, None], cap[None, None, :],
+                u_s, util[None, None, :], size[..., None],
+                us, usq, n_f, min_dvar)
             not_self = dev_iota[None, None, :] != src_b[:, None, None]
-            # faithful destination cutoff: only devices strictly before the
-            # source in the stable emptiest-first order (util asc, index
-            # asc on ties) are candidates
-            before_src = ((util[None, None, :] < u_s)
-                          | ((util[None, None, :] == u_s)
-                             & (dev_iota[None, None, :]
-                                < src_b[:, None, None])))
-            return (class_ok & ~bad & cap_ok & crit & var_ok
-                    & (real & src_ok)[..., None] & not_self
-                    & dev_in[None, None, :] & before_src)
+            # faithful destination cutoff (legality.before_source)
+            before_src = legality.before_source(
+                util[None, None, :], u_s, dev_iota[None, None, :],
+                src_b[:, None, None])
+            return (cap_ok & crit & var_ok & (real & src_ok)[..., None]
+                    & not_self & dev_in[None, None, :] & before_src)
 
         def body(carry):
             (sb, c, found_row, found_dst,
-             win_j, win_row, win_dst, done) = carry
-            valid = eval_tile(sb, c)
+             win_j, win_row, win_dst, done, c_dev, c_ok, c_clean) = carry
+            if cached:
+                zero = jnp.int32(0)
+                src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
+                tags = lax.dynamic_slice_in_dim(c_dev, sb * kb, kb)
+                clean_b = lax.dynamic_slice(c_clean, (sb * kb, c),
+                                            (kb, 1))[:, 0]
+                hit = jnp.all((tags == src_b) & clean_b)
+                # only the expensive static evaluation is conditional —
+                # the large cache buffers stay *outside* the cond (a
+                # conditional that returns them would copy the whole
+                # buffer every iteration); on a hit the same block is
+                # harmlessly rewritten in place
+                static = lax.cond(
+                    hit,
+                    lambda: lax.dynamic_slice(
+                        c_ok, (sb * kb, c * rb, zero), (kb, rb, n_dev)),
+                    lambda: eval_static(sb, c))
+                c_ok = lax.dynamic_update_slice(
+                    c_ok, static, (sb * kb, c * rb, zero))
+                # a tag change invalidates the slot's other blocks (a
+                # no-op when the tags already matched)
+                keep = tags == src_b
+                rowc = lax.dynamic_slice(c_clean, (sb * kb, zero),
+                                         (kb, n_blocks))
+                rowc = jnp.where(keep[:, None], rowc, False)
+                rowc = lax.dynamic_update_slice(
+                    rowc, jnp.ones((kb, 1), bool), (zero, c))
+                c_clean = lax.dynamic_update_slice(c_clean, rowc,
+                                                   (sb * kb, zero))
+                c_dev = lax.dynamic_update_slice(c_dev, src_b, (sb * kb,))
+            else:
+                static = eval_static(sb, c)
+            valid = static & eval_dyn(sb, c)
             anyv, dst = _select_rows(valid.reshape(kb * rb, n_dev), util,
                                      backend)
             anyv = anyv.reshape(kb, rb)
@@ -265,23 +322,25 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             found_row = jnp.where(exhausted, reset, found_row)
             found_dst = jnp.where(exhausted, 0, found_dst)
             return (next_sb, next_c, found_row, found_dst,
-                    win_j, win_row, win_dst, done)
+                    win_j, win_row, win_dst, done, c_dev, c_ok, c_clean)
 
         def cond(carry):
-            return active & ~carry[-1]
+            return active & ~carry[7]
 
         init = (jnp.int32(0), jnp.int32(0), jnp.full((kb,), -1, jnp.int32),
                 jnp.zeros((kb,), jnp.int32), jnp.int32(-1), jnp.int32(-1),
-                jnp.int32(0), jnp.bool_(False))
+                jnp.int32(0), jnp.bool_(False), c_dev, c_ok, c_clean)
         out = lax.while_loop(cond, body, init)
         win_j, win_row, win_dst = out[4], out[5], out[6]
+        dyn = dyn[:10] + (out[8], out[9], out[10])
         found = win_j >= 0
         jw = jnp.clip(win_j, 0, k_pad - 1)
         return (found,
                 rows_k[jw, jnp.clip(win_row, 0, r_cap - 1)],
                 src_order[jw],
                 win_dst,
-                win_j + 1)
+                win_j + 1,
+                dyn)
 
     def reorder(order, util, src, dst):
         """Re-sort ``src`` and ``dst`` within the maintained stable
@@ -308,7 +367,7 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
         update a no-op *without branching*, so XLA keeps the scan carry
         buffers in place; no update touches more than O(n) elements."""
         used, util, us, usq, acting, pool_counts, dst_ok, \
-            rows_on, nrows, order = dyn
+            rows_on, nrows, order, c_dev, c_ok, c_clean = dyn
         okf = ok.astype(jnp.float64)
         oki = ok.astype(jnp.int32)
         row = jnp.where(ok, row, 0)
@@ -325,7 +384,7 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
         # changed: recompute those two entries
         c2 = pool_counts[pool, both]
         i2 = ideal[pool, both]
-        ok2 = jnp.abs(c2 + 1.0 - i2) <= jnp.abs(c2 - i2) + slack
+        ok2 = legality.dst_count_ok(c2, i2, slack)
         dst_ok = dst_ok.at[pool, both].set(jnp.where(ok, ok2,
                                                      dst_ok[pool, both]))
         # sorted row lists: shift-remove from src, shift-insert into dst
@@ -351,13 +410,24 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             usq = usq + (u_new ** 2 - util[i] ** 2)   # identical, deltas
             util = util.at[i].set(u_new)      # are exactly 0.0
         order = jnp.where(ok, reorder(order, util, src, dst), order)
+        if cached:
+            # cache repair: the move only perturbs the two touched
+            # devices' tiles and the row-blocks holding a shard of the
+            # moved PG (its acting set changed) — invalidate exactly
+            # those; everything else stays warm across moves
+            touched = (c_dev == src) | (c_dev == dst)      # (k_pad,)
+            rows_c = rows_on[jnp.clip(c_dev, 0)]           # (k_pad, r_cap)
+            has_pg = (rows_c >= 0) & (sh_pg[jnp.clip(rows_c, 0)] == pgi)
+            has_pg_b = has_pg.reshape(k_pad, n_blocks, rb).any(axis=2)
+            dirty = touched[:, None] | has_pg_b            # (k_pad, blocks)
+            c_clean = jnp.where(ok, c_clean & ~dirty, c_clean)
         return (used, util, us, usq, acting, pool_counts, dst_ok,
-                rows_on, nrows, order)
+                rows_on, nrows, order, c_dev, c_ok, c_clean)
 
     def step(carry, _):
         dyn, done, overflow = carry
         active = ~(done | overflow)
-        found, row, src, dst, tried = select_one(dyn, active)
+        found, row, src, dst, tried, dyn = select_one(dyn, active)
         # a full destination row-list would drop a shard: stop the chunk
         # and let the host re-pad (never hit when row_capacity >= max
         # rows/device + chunk, the packing invariant)
@@ -408,17 +478,23 @@ class BatchPlanner:
     (:meth:`ClusterState.subscribe`), so at the next :meth:`plan` it knows
     *what* changed, not just that something did:
 
-    * :class:`PoolGrowthDelta` and :class:`DeviceAddDelta` are **absorbed
-      into the device carry** (:meth:`observe` / ``_absorb``): shard sizes,
-      utilizations, ideals and the sorted util-order are refreshed in
-      place, and the ``n_dev`` axis is extended with padded rows for new
-      devices — no dense rebuild, and for pure growth not even a jit
-      recompile.  The refreshed carry is bitwise equal to a freshly built
-      one, so warm continuations stay bit-identical to cold starts
-      (regression-tested via :func:`dense_rebuild_count`).
-    * Any other delta (device out, pool create, a foreign balancer's
-      movements), a missed delta, or a non-empty overshoot stash falls
-      back to the full rebuild — correctness never depends on absorption.
+    * **Every known delta type absorbs into the device carry**
+      (:meth:`observe` / ``_absorb``, full coverage since PR 4):
+      :class:`PoolGrowthDelta` and :class:`DeviceOutDelta` are pure host
+      refreshes (sizes / utils / ideals / in-mask / orders recomputed
+      with the shared legality core), :class:`DeviceAddDelta` extends the
+      ``n_dev`` axis with padded rows, :class:`MovementDelta` (a foreign
+      balancer's move) and :class:`PoolCreateDelta` re-read the mutated
+      assignment append-only.  A non-empty overshoot stash no longer
+      blocks absorption — the stashed continuation (planned pre-delta,
+      never applied to the state) is discarded and re-derived.  The
+      refreshed carry is bitwise equal to a freshly built one, so warm
+      continuations stay bit-identical to cold starts (regression-tested
+      via :func:`dense_rebuild_count`).
+    * The conservative full-rebuild fallback remains for unknown delta
+      types, a missed/conflicting delta stream, and id-renumbering
+      topology changes (a device class or pool id sorting before existing
+      ones) — correctness never depends on absorption.
 
     Because the §3.1 sequence is deterministic, a warm continuation emits
     exactly the moves a cold-start planner would (property-tested in
@@ -435,11 +511,13 @@ class BatchPlanner:
                  cfg: EquilibriumConfig | None = None, chunk: int = 64,
                  source_block: int = 1, row_block: int = 8,
                  row_capacity: int | None = None,
-                 select_backend: str = "auto"):
+                 select_backend: str = "auto",
+                 legality_cache: bool = True):
         self.state = state
         self.cfg = cfg or EquilibriumConfig()
         self.chunk = chunk
         self.row_capacity = row_capacity
+        self.legality_cache = legality_cache
         if select_backend == "auto":
             select_backend = ("pallas-tpu" if jax.default_backend() == "tpu"
                               else "ref")
@@ -451,6 +529,7 @@ class BatchPlanner:
         self._dyn = None
         self._epoch = -1                # state.mutation_epoch at last sync
         self._done = False
+        self._terminal_seconds = 0.0    # wall time of empty final chunks
         # moves the device already planned+applied in the carry but the
         # host has not yet emitted: (row, src, dst, tried, seconds)
         self._stash: list[tuple[int, int, int, int, float]] = []
@@ -475,6 +554,19 @@ class BatchPlanner:
 
     def _round_cap(self, n: int) -> int:
         return max(self._rb, -(-int(n) // self._rb) * self._rb)
+
+    def _fresh_cache(self, n_dev: int):
+        """All-invalid legality-cache arrays (cache_dev, cache_ok,
+        cache_clean) for the current (k, kb, r_cap) geometry; every slot
+        tags device -1, so the first walk of any tile recomputes it."""
+        if not self.legality_cache:
+            return (jnp.full((1,), -1, jnp.int32),
+                    jnp.zeros((1, 1, 1), bool), jnp.zeros((1, 1), bool))
+        k_pad = -(-self._k // self._kb) * self._kb
+        n_blocks = self._r_cap // self._rb
+        return (jnp.full((k_pad,), -1, jnp.int32),
+                jnp.zeros((k_pad, self._r_cap, n_dev), bool),
+                jnp.zeros((k_pad, n_blocks), bool))
 
     def _build(self) -> None:
         """Full rebuild of the device mirror from ``self.state``."""
@@ -521,11 +613,10 @@ class BatchPlanner:
             jnp.asarray(dense.sh_scnt, jnp.int32),
             jnp.asarray(dense.ideal),
         )
-        from .equilibrium_jax import dst_count_ok
         nrows_np = np.array([len(s) for s in dense.rows_on_dev], np.int32)
-        dst_ok_np = dst_count_ok(dense.pool_counts, dense.ideal,
-                                 cfg.count_slack)
-        order_np = np.argsort(-dense.util, kind="stable").astype(np.int32)
+        dst_ok_np = legality.dst_count_ok(dense.pool_counts, dense.ideal,
+                                          cfg.count_slack)
+        order_np = legality.fullest_first(dense.util).astype(np.int32)
         self._r_cap = self._round_cap(
             max(self.row_capacity, int(nrows_np.max()))
             if self.row_capacity is not None
@@ -539,7 +630,7 @@ class BatchPlanner:
             jnp.asarray(_pack_rows(dense.rows_on_dev, dense.sh_size,
                                    self._r_cap)),
             jnp.asarray(nrows_np), jnp.asarray(order_np),
-        )
+        ) + self._fresh_cache(dense.n_dev)
         self._slack = jnp.asarray(cfg.count_slack, jnp.float64)
         self._headroom = jnp.asarray(cfg.headroom, jnp.float64)
         self._min_dvar = jnp.asarray(cfg.min_variance_delta, jnp.float64)
@@ -584,22 +675,50 @@ class BatchPlanner:
     def _class_ids_stable(self) -> bool:
         """Device classes are dense sorted ids in the carry; a new class
         that sorts before an existing one would renumber ``sh_class``."""
-        from .equilibrium_jax import device_class_ids
-        new_id, _ = device_class_ids(self.state.devices)
+        new_id, _ = legality.device_class_ids(self.state.devices)
         return all(new_id.get(c) == i
                    for c, i in self._dense.class_id.items())
 
     def _absorbable(self, run: list[ClusterDelta] | None) -> bool:
-        if run is None or self._invalid or self._stash or self._dyn is None:
+        """Every known delta type is absorbable (full coverage, PR 4):
+        pool growth and device out/in are pure host refreshes, device
+        adds extend the device axis (unless a new class renumbers the
+        dense class ids), foreign movements and pool creates are
+        append/update-only re-reads of the mutated state.  A non-empty
+        overshoot stash no longer poisons absorption — the stashed
+        continuation is discarded and re-derived from the refreshed
+        carry.  The conservative rebuild fallback remains for unknown
+        delta types, a broken delta stream, and renumbering topology
+        changes."""
+        if run is None or self._invalid or self._dyn is None:
             return False
+        dense = self._dense
+        if dense is None:
+            return False
+        max_pool = max(dense.pool_index, default=-1)
         for delta in run:
-            if isinstance(delta, PoolGrowthDelta):
+            if isinstance(delta, (PoolGrowthDelta, DeviceOutDelta,
+                                  MovementDelta)):
                 continue
             if isinstance(delta, DeviceAddDelta):
                 if not self._class_ids_stable():
                     return False
                 continue
-            return False
+            if isinstance(delta, PoolCreateDelta):
+                # pools are dense sorted ids in the carry: the new pool
+                # (and its PGs / shard rows) must sort after everything
+                # already mirrored, and its rule's device classes must
+                # already have dense ids
+                pool = self.state.pools.get(delta.pool_id)
+                if pool is None or delta.pool_id <= max_pool:
+                    return False
+                if not all(s.device_class is None
+                           or s.device_class in dense.class_id
+                           for s in pool.rule.steps):
+                    return False
+                max_pool = delta.pool_id
+                continue
+            return False        # unknown delta type: conservative fallback
         return True
 
     def observe(self, delta: ClusterDelta) -> bool:
@@ -629,88 +748,197 @@ class BatchPlanner:
         self._pending.clear()
         self._invalid = False
 
+    def _extend_pools(self, created: list[int]) -> None:
+        """Append freshly created pools' PGs and shard rows to the host
+        mirror's tables, in the exact (sorted pg, slot-major) order a
+        cold DenseState build walks, so an absorbed carry stays bitwise
+        equal to a rebuilt one (guarded by ``_absorbable``: the new pool
+        ids sort after everything already mirrored)."""
+        state, dense = self.state, self._dense
+        lvl_id = {l: i for i, l in enumerate(dense.levels)}
+        for pid in sorted(created):
+            pool = state.pools[pid]
+            dense.pool_index[pid] = len(dense.pool_index)
+            dense.n_pools = len(dense.pool_index)
+            # per-slot rule geometry from the same shared walk
+            # DenseState.__init__ uses (legality.rule_slot_steps)
+            geometry = legality.rule_slot_steps(pool.rule)
+            new = {"pg": [], "pool": [], "level": [], "class": [],
+                   "step": [], "slot": [], "sbase": [], "scnt": []}
+            for pg in sorted(state.pgs_of_pool[pid]):
+                dense.pg_index[pg] = len(dense.pg_index)
+                dense.pgs.append(pg)
+                for slot in range(pool.size):
+                    dense.row_of[(pg, slot)] = len(dense.shard_key)
+                    dense.shard_key.append((pg, slot))
+                    si, base, scnt, domain, dev_class = geometry[slot]
+                    new["pg"].append(dense.pg_index[pg])
+                    new["pool"].append(dense.pool_index[pid])
+                    new["level"].append(lvl_id[domain])
+                    new["class"].append(dense.class_id[dev_class]
+                                        if dev_class is not None else -1)
+                    new["step"].append(si)
+                    new["slot"].append(slot)
+                    new["sbase"].append(base)
+                    new["scnt"].append(scnt)
+            for key, attr in (("pg", "sh_pg"), ("pool", "sh_pool"),
+                              ("level", "sh_level"), ("class", "sh_class"),
+                              ("step", "sh_step"), ("slot", "sh_slot"),
+                              ("sbase", "sh_sbase"), ("scnt", "sh_scnt")):
+                setattr(dense, attr,
+                        np.concatenate([getattr(dense, attr), new[key]]
+                                       ).astype(np.int64))
+
     def _absorb(self) -> bool:
         """Apply the pending delta run directly to the device carry.
 
-        Only pool growth and device adds are absorbable.  Every refreshed
-        array is recomputed with the *same host-side expressions*
-        :meth:`_build` uses (``state.used()``, ``ideal_shard_count``,
-        stable argsorts, the ``(size desc, row asc)`` row order), so the
-        absorbed carry is bitwise equal to a freshly built one and the
-        continued move sequence stays bit-identical to a cold start.
+        Full coverage (PR 4): pool growth, device add, device out/in,
+        foreign movements and pool creates all absorb; only unknown
+        delta types, a broken stream, or id-renumbering topology changes
+        rebuild.  Every refreshed array is recomputed with the *same
+        host-side expressions* :meth:`_build` uses — the shared legality
+        core for ids / criteria / orders, ``state.used()`` /
+        ``ideal_shard_count`` for accounting, ``_pack_rows`` for the
+        ``(size desc, row asc)`` candidate order — so the absorbed carry
+        is bitwise equal to a freshly built one and the continued move
+        sequence stays bit-identical to a cold start.
+
+        A non-empty overshoot stash is simply discarded: its moves were
+        planned against the pre-delta state and exist *only* in the
+        carry (never applied to ``self.state``), so re-deriving the
+        structural arrays from the mutated state is the undo.
         """
-        from .equilibrium_jax import (device_class_ids, device_domain_ids,
-                                      dst_count_ok)
         run = self._pending_run()
         if not self._absorbable(run):
             return False
         state, cfg, dense = self.state, self.cfg, self._dense
         added = [d.device for d in run if isinstance(d, DeviceAddDelta)]
+        created = [d.pool_id for d in run if isinstance(d, PoolCreateDelta)]
         grew = any(isinstance(d, PoolGrowthDelta) for d in run)
+        # shard assignment / acting-table changes require re-reading the
+        # structural arrays from the mutated state; pure growth / add /
+        # out runs keep the device-side tables (the hot per-tick path)
+        structural = (bool(created) or bool(self._stash)
+                      or any(isinstance(d, MovementDelta) for d in run))
+        self._stash = []
+
+        # structural extensions first (append-only, per _absorbable)
+        if created:
+            self._extend_pools(created)
+        # per-device legality inputs through the shared LegalityState —
+        # the same construction DenseState.__init__ uses (append-only
+        # device order keeps every existing id, verified by
+        # _class_ids_stable; out flips land in dev_in).  Only adds and
+        # out-flips can change the device axis, so pure growth /
+        # movement runs keep the existing registry and device buffers
+        outs = any(isinstance(d, DeviceOutDelta) for d in run)
+        if added or outs:
+            dense.legality = leg = LegalityState.from_cluster(state)
+            dense.class_id = leg.class_id
+            dense.dev_class = leg.dev_class
+            dense.dev_domain_arr = leg.dev_domain_arr
+            dense.n_domains = leg.n_domains
+            dense.dev_in = leg.dev_in
+            dense.cap = leg.cap
+            dev_const = (
+                jnp.asarray(dense.cap),
+                jnp.asarray(dense.dev_class, jnp.int32),
+                jnp.asarray(dense.dev_in),
+                jnp.asarray(dense.dev_domain_arr, jnp.int32),
+            )
+        else:
+            dev_const = self._const[:4]
+        n_dev = dense.n_dev = state.n_devices
+        if added:
+            self._k = min(cfg.k, max(n_dev, 1))
+            self._kb = min(self._kb, self._k)
 
         # host-side rebuild-equivalent views of the mutated cluster
-        cap = state.capacity_vector()
+        cap = dense.cap
         used = state.used()
         util = used / cap
-        n_dev = state.n_devices
         pool_ids = sorted(state.pools)
         ideal = np.stack([state.ideal_shard_count(state.pools[p])
                           for p in pool_ids])
         pool_counts = np.stack([state.pool_counts[p] for p in pool_ids]
                                ).astype(np.float64)
-        dst_ok = dst_count_ok(pool_counts, ideal, cfg.count_slack)
+        dst_ok = legality.dst_count_ok(pool_counts, ideal, cfg.count_slack)
         sh_size = np.array([state.shard_sizes[pg]
                             for pg, _ in dense.shard_key])
 
-        # per-device row table: extend for new devices; re-sort the
-        # faithful (size desc, row asc) candidate order when sizes moved
-        rows_np, nrows_np = (np.array(a) for a in
-                             _fetch((self._dyn[7], self._dyn[8])))
-        if added:
-            pad_rows = np.full((len(added), rows_np.shape[1]), -1, np.int32)
-            rows_np = np.concatenate([rows_np, pad_rows])
-            nrows_np = np.concatenate(
-                [nrows_np, np.zeros(len(added), np.int32)])
-        if grew:
-            for d in range(n_dev):
-                nd = int(nrows_np[d])
-                order = sorted(rows_np[d, :nd].tolist(),
-                               key=lambda r: (-sh_size[r], r))
-                rows_np[d, :nd] = order
+        if structural:
+            # canonical row tables straight from the mutated state — the
+            # same (size desc, row asc) order _build's _pack_rows emits;
+            # foreign movements and the discarded stash both collapse to
+            # "re-read the assignment", growth re-sorts implicitly
+            rows_on_dev: list[list[int]] = [[] for _ in range(n_dev)]
+            for osd, shards in state.shards_on.items():
+                d = state.idx(osd)
+                for key in shards:
+                    rows_on_dev[d].append(dense.row_of[key])
+            nrows_np = np.array([len(r) for r in rows_on_dev], np.int32)
+            max_rows = int(nrows_np.max(initial=0))
+            if max_rows + self.chunk > self._r_cap:
+                self._r_cap = self._round_cap(max_rows + self.chunk)
+            rows_np = _pack_rows(rows_on_dev, sh_size, self._r_cap)
 
-        if added:
-            # device class / domain / in-mask columns, rebuilt with the
-            # same shared helpers DenseState.__init__ uses (append-only
-            # device order keeps every existing id, verified by
-            # _class_ids_stable)
-            dense.class_id, dense.dev_class = device_class_ids(state.devices)
-            dense.dev_domain_arr, _ = device_domain_ids(state.devices,
-                                                        dense.levels)
-            dense.n_dev = n_dev
-            self._k = min(cfg.k, max(n_dev, 1))
-            self._kb = min(self._kb, self._k)
-        dense.cap = cap
+            # acting table from state (width = max pool size, -1 padded)
+            n_slots = max(p.size for p in state.pools.values())
+            acting_np = np.full((len(dense.pgs), n_slots), -1, np.int32)
+            for pg, pgi in dense.pg_index.items():
+                osds = state.acting[pg]
+                acting_np[pgi, :len(osds)] = [state.idx(o) for o in osds]
+            acting = jnp.asarray(acting_np)
+            shard_const = (
+                jnp.asarray(sh_size.astype(np.float64)),
+                jnp.asarray(dense.sh_pg, jnp.int32),
+                jnp.asarray(dense.sh_pool, jnp.int32),
+                jnp.asarray(dense.sh_class, jnp.int32),
+                jnp.asarray(dense.sh_level, jnp.int32),
+                jnp.asarray(dense.sh_slot, jnp.int32),
+                jnp.asarray(dense.sh_sbase, jnp.int32),
+                jnp.asarray(dense.sh_scnt, jnp.int32),
+            )
+        else:
+            # assignment untouched: keep the device-side acting table and
+            # per-shard geometry buffers; row tables come back from the
+            # device (one sync), extended for adds and re-sorted for
+            # growth — the cheap per-tick path
+            acting = self._dyn[4]
+            rows_np, nrows_np = (np.array(a) for a in
+                                 _fetch((self._dyn[7], self._dyn[8])))
+            if added:
+                pad_rows = np.full((len(added), rows_np.shape[1]), -1,
+                                   np.int32)
+                rows_np = np.concatenate([rows_np, pad_rows])
+                nrows_np = np.concatenate(
+                    [nrows_np, np.zeros(len(added), np.int32)])
+            if grew:
+                for d in range(n_dev):
+                    nd = int(nrows_np[d])
+                    order = sorted(rows_np[d, :nd].tolist(),
+                                   key=lambda r: (-sh_size[r], r))
+                    rows_np[d, :nd] = order
+            shard_const = ((jnp.asarray(sh_size.astype(np.float64))
+                            if grew else self._const[4]),) \
+                + self._const[5:12]
+
         dense.used = used
         dense.util = util
         dense.sh_size = sh_size          # Movement sizes read from here
         dense.ideal = ideal
         dense.pool_counts = pool_counts
-        dense.dev_in = state.in_mask()
 
-        self._const = (
-            jnp.asarray(dense.cap), jnp.asarray(dense.dev_class, jnp.int32),
-            jnp.asarray(dense.dev_in),
-            jnp.asarray(dense.dev_domain_arr, jnp.int32),
-            jnp.asarray(sh_size.astype(np.float64)),
-        ) + self._const[5:12] + (jnp.asarray(ideal),)
+        self._const = dev_const + shard_const + (jnp.asarray(ideal),)
         self._dyn = (
             jnp.asarray(used), jnp.asarray(util),
             jnp.asarray(float(util.sum()), jnp.float64),
             jnp.asarray(float((util ** 2).sum()), jnp.float64),
-            self._dyn[4], jnp.asarray(pool_counts), jnp.asarray(dst_ok),
-            jnp.asarray(rows_np), jnp.asarray(nrows_np),
-            jnp.asarray(np.argsort(-util, kind="stable").astype(np.int32)),
-        )
+            acting, jnp.asarray(pool_counts),
+            jnp.asarray(dst_ok), jnp.asarray(rows_np),
+            jnp.asarray(nrows_np),
+            jnp.asarray(legality.fullest_first(util).astype(np.int32)),
+        ) + self._fresh_cache(n_dev)
         self._done = False
         self._absorbed_deltas += len(run)
         self._epoch = state.mutation_epoch
@@ -721,7 +949,10 @@ class BatchPlanner:
 
     def _chunk_loop(self, budget: int) -> list[tuple[int, int, int, int, float]]:
         """Run chunks until ``budget`` raw moves are on hand (stashing any
-        overshoot), the device reports convergence, or a re-pad is needed."""
+        overshoot), the device reports convergence, or a re-pad is needed.
+        ``self._terminal_seconds`` collects the wall time of chunks that
+        emit no moves (the terminal every-source-fruitless scan)."""
+        self._terminal_seconds = 0.0
         raw: list[tuple[int, int, int, int, float]] = []
         take = min(len(self._stash), budget)
         raw.extend(self._stash[:take])
@@ -732,11 +963,15 @@ class BatchPlanner:
             self._dyn, done, overflow, moves = _plan_chunk(
                 self._dyn, self._const, self._slack, self._headroom,
                 self._min_dvar, k=self._k, kb=self._kb, rb=self._rb,
-                m=self.chunk, backend=self.select_backend)
+                m=self.chunk, backend=self.select_backend,
+                cached=self.legality_cache)
             moves_np, done, overflow, nrows_np = _fetch(
                 (moves, done, overflow, self._dyn[8]))
             dt = time.perf_counter() - t0
             emitted = moves_np[moves_np[:, 0] >= 0]
+            if len(emitted) == 0 and done and not overflow:
+                self._terminal_seconds += dt    # the fruitless final scan
+                                                # (not an overflow re-pad)
             per_s = dt / max(len(emitted), 1)
             new = [(*m, per_s) for m in map(tuple, emitted.tolist())]
             raw.extend(new)
@@ -754,7 +989,9 @@ class BatchPlanner:
                 break
             if overflow or int(nrows_np.max()) + self.chunk > self._r_cap:
                 # re-pad the per-device row table and resume (one extra
-                # sync; triggers one recompile for the new row_capacity)
+                # sync; triggers one recompile for the new row_capacity);
+                # the legality cache is shape-bound to r_cap, so it
+                # restarts cold
                 rows_np = _fetch(self._dyn[7])
                 self._r_cap = self._round_cap(int(nrows_np.max()) + self.chunk)
                 packed = np.full((state.n_devices, self._r_cap), -1, np.int32)
@@ -762,18 +999,24 @@ class BatchPlanner:
                     nd = int(nrows_np[d])
                     packed[d, :nd] = rows_np[d, :nd]
                 self._dyn = self._dyn[:7] + (jnp.asarray(packed),) \
-                    + self._dyn[8:]
+                    + self._dyn[8:10] + self._fresh_cache(state.n_devices)
         return raw
 
     def plan(self, max_moves: int | None = None,
              record_trajectory: bool = False,
-             record_free_space: bool = True):
+             record_free_space: bool = True,
+             stats_out: dict | None = None):
         """Plan up to ``max_moves`` (default ``cfg.max_moves``) further
         moves, applying them to the bound state; returns (movements,
         records) exactly like :func:`repro.core.equilibrium.balance`.
 
         Reuses the device carry from the previous call when the state is
-        unchanged; rebuilds it (one counted rebuild) otherwise.
+        unchanged; absorbs any absorbable pending delta run into it, and
+        rebuilds (one counted rebuild) only as the fallback.  When
+        ``stats_out`` is given it receives the convergence-tail
+        instrumentation: a ``sources_tried`` histogram and the share of
+        planning wall time spent on moves with ``sources_tried > 1``
+        (chunk-amortized, since selection and apply are fused on-device).
         """
         budget = self.cfg.max_moves if max_moves is None else max_moves
         state = self.state
@@ -783,8 +1026,24 @@ class BatchPlanner:
             elif self.stale and not self._absorb():
                 self._build()
             if self._dyn is None or budget <= 0:
+                if stats_out is not None:
+                    from .equilibrium import _tail_flush, _tail_stats
+                    _tail_flush(_tail_stats(stats_out))
+                    stats_out["legality_cache"] = self.legality_cache
                 return [], []
             raw_moves = self._chunk_loop(budget)
+            if stats_out is not None:
+                # same schema as the host-loop engines (_tail_flush);
+                # selection and apply are fused on-device, so the whole
+                # chunk-amortized move time is attributed to selection
+                from .equilibrium import (_tail_flush, _tail_record,
+                                          _tail_stats, _tail_terminal)
+                acc = _tail_stats(stats_out)
+                for _row, _src, _dst, tried, secs in raw_moves:
+                    _tail_record(acc, tried, secs, 0.0)
+                _tail_terminal(acc, self._terminal_seconds)
+                _tail_flush(acc)
+                stats_out["legality_cache"] = self.legality_cache
 
             # -- reconcile with the dict-based model, replaying the move log
             dense = self._dense
@@ -821,7 +1080,9 @@ def _balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
                    record_free_space: bool = True, chunk: int = 64,
                    source_block: int = 1, row_block: int = 8,
                    row_capacity: int | None = None,
-                   select_backend: str = "auto"):
+                   select_backend: str = "auto",
+                   legality_cache: bool = True,
+                   stats_out: dict | None = None):
     """Device-resident drop-in for the faithful §3.1 planner:
     identical move sequences, one host sync per ``chunk`` moves.
     Library-internal engine entry; the public API is
@@ -851,12 +1112,14 @@ def _balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
         from .equilibrium_jax import _balance_fast
         return _balance_fast(state, cfg, record_trajectory=record_trajectory,
                              record_free_space=record_free_space,
-                             engine="numpy")
+                             engine="numpy", stats_out=stats_out)
     planner = BatchPlanner(state, cfg, chunk=chunk, source_block=source_block,
                            row_block=row_block, row_capacity=row_capacity,
-                           select_backend=select_backend)
+                           select_backend=select_backend,
+                           legality_cache=legality_cache)
     return planner.plan(record_trajectory=record_trajectory,
-                        record_free_space=record_free_space)
+                        record_free_space=record_free_space,
+                        stats_out=stats_out)
 
 
 def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
@@ -864,7 +1127,8 @@ def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
                   record_free_space: bool = True, chunk: int = 64,
                   source_block: int = 1, row_block: int = 8,
                   row_capacity: int | None = None,
-                  select_backend: str = "auto"):
+                  select_backend: str = "auto",
+                  legality_cache: bool = True):
     """Deprecated: use ``create_planner("equilibrium_batch")`` from
     :mod:`repro.core.planner`, or hold a :class:`BatchPlanner` directly
     for warm-started incremental planning."""
@@ -875,4 +1139,5 @@ def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
                           record_free_space=record_free_space, chunk=chunk,
                           source_block=source_block, row_block=row_block,
                           row_capacity=row_capacity,
-                          select_backend=select_backend)
+                          select_backend=select_backend,
+                          legality_cache=legality_cache)

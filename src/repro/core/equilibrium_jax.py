@@ -46,6 +46,8 @@ import numpy as np
 
 from .cluster import ClusterState, Movement
 from .equilibrium import EquilibriumConfig, MoveRecord
+from . import legality
+from .legality import LegalityState
 
 try:  # JAX is always present in this repo, but the numpy path is standalone.
     import jax
@@ -58,38 +60,10 @@ except Exception:  # pragma: no cover
 # ---------------------------------------------------------------------------
 # Dense registry of cluster state
 #
-# The three helpers below are the *single source* of the id-numbering and
-# criterion expressions that both a full DenseState build and the batch
-# engine's delta absorption (BatchPlanner._absorb) must agree on bitwise —
-# keep them shared, or a warm carry silently diverges from a rebuilt one.
-
-
-def device_class_ids(devices) -> tuple[dict, np.ndarray]:
-    """Dense ids for the sorted device-class set + per-device id vector."""
-    class_id = {c: i for i, c in
-                enumerate(sorted({d.device_class for d in devices}))}
-    return class_id, np.array([class_id[d.device_class] for d in devices])
-
-
-def device_domain_ids(devices, levels) -> tuple[np.ndarray, dict]:
-    """(len(levels), n_dev) failure-domain token ids (first-seen order
-    per level, so appending devices never renumbers existing ids), plus
-    the tokens-per-level counts."""
-    arr = np.empty((len(levels), len(devices)), dtype=np.int64)
-    n_domains = {}
-    for li, lvl in enumerate(levels):
-        toks: dict[str, int] = {}
-        for i, d in enumerate(devices):
-            arr[li, i] = toks.setdefault(d.domain(lvl), len(toks))
-        n_domains[lvl] = len(toks)
-    return arr, n_domains
-
-
-def dst_count_ok(pool_counts: np.ndarray, ideal: np.ndarray,
-                 slack: float) -> np.ndarray:
-    """§3.1 destination ideal-count criterion, vectorized."""
-    return (np.abs(pool_counts + 1.0 - ideal)
-            <= np.abs(pool_counts - ideal) + slack)
+# All id-numbering and criterion math comes from repro.core.legality — the
+# single source both a full DenseState build and the batch engine's delta
+# absorption (BatchPlanner._absorb) share, so a warm carry cannot diverge
+# bitwise from a rebuilt one.
 
 
 class DenseState:
@@ -105,19 +79,21 @@ class DenseState:
         devs = state.devices
         n_dev = len(devs)
         self.n_dev = n_dev
-        self.cap = state.capacity_vector()
+
+        # per-device legality inputs (capacities, class ids, domain ids,
+        # in-mask) come from the shared LegalityState; out devices are
+        # never legal destinations (mirrors move_is_legal's out_osds
+        # check, independent of the ideal-count criterion which stops
+        # excluding at count_slack >= 1)
+        self.legality = leg = LegalityState.from_cluster(state)
+        self.cap = leg.cap
         self.used = state.used()
-
-        self.class_id, self.dev_class = device_class_ids(devs)
-        # weighted ("in") devices; out devices are never legal destinations
-        # (mirrors move_is_legal's out_osds check, independent of the
-        # ideal-count criterion which stops excluding at count_slack >= 1)
-        self.dev_in = state.in_mask()
-
-        # global domain ids per failure-domain level
-        self.levels = ("osd", "host", "rack", "datacenter")
-        self.dev_domain_arr, self.n_domains = device_domain_ids(
-            devs, self.levels)
+        self.class_id = leg.class_id
+        self.dev_class = leg.dev_class
+        self.dev_in = leg.dev_in
+        self.levels = leg.levels
+        self.dev_domain_arr = leg.dev_domain_arr
+        self.n_domains = leg.n_domains
         self.dev_domain = {lvl: self.dev_domain_arr[li]
                            for li, lvl in enumerate(self.levels)}
 
@@ -149,10 +125,13 @@ class DenseState:
         self.sh_dev = np.array([state.idx(state.acting[pg][slot])
                                 for pg, slot in rows])
 
-        # per-shard rule-step attributes (single walk of each pool rule:
-        # step index, the step's first slot and count — the slot geometry
-        # every engine shares)
+        # per-shard rule-step attributes from the shared slot-geometry
+        # walk (legality.rule_slot_steps — also the pool-create
+        # absorption's source, so absorbed rows cannot drift from built
+        # ones)
         lvl_id = {l: i for i, l in enumerate(self.levels)}
+        geometry = {p: legality.rule_slot_steps(state.pools[p].rule)
+                    for p in state.pools}
         self.sh_level = np.empty(n_sh, dtype=np.int64)
         self.sh_class = np.empty(n_sh, dtype=np.int64)       # -1 = any
         self.sh_step = np.empty(n_sh, dtype=np.int64)        # step idx in pool rule
@@ -160,21 +139,14 @@ class DenseState:
         self.sh_sbase = np.empty(n_sh, dtype=np.int64)       # step's first slot
         self.sh_scnt = np.empty(n_sh, dtype=np.int64)        # step's slot count
         for r, (pg, slot) in enumerate(rows):
-            step = state.pools[pg[0]].rule.step_of_slot(slot)
-            self.sh_level[r] = lvl_id[step.failure_domain]
-            self.sh_class[r] = (self.class_id[step.device_class]
-                                if step.device_class is not None else -1)
-            si = 0
-            base = 0
-            for k, s in enumerate(state.pools[pg[0]].rule.steps):
-                if slot < base + s.count:
-                    si = k
-                    break
-                base += s.count
+            si, base, scnt, domain, dev_class = geometry[pg[0]][slot]
+            self.sh_level[r] = lvl_id[domain]
+            self.sh_class[r] = (self.class_id[dev_class]
+                                if dev_class is not None else -1)
             self.sh_step[r] = si
             self.sh_slot[r] = slot
             self.sh_sbase[r] = base
-            self.sh_scnt[r] = s.count
+            self.sh_scnt[r] = scnt
 
         # membership (n_pg, n_dev) and per-(pg,step,level) domain occupancy
         self.member = np.zeros((n_pg, n_dev), dtype=bool)
@@ -284,7 +256,7 @@ class DenseState:
 
         # class match
         cls = self.sh_class[rows][:, None]                    # (R,1)
-        class_ok = (cls < 0) | (self.dev_class[None, :] == cls)
+        cls_ok = legality.class_ok(cls, self.dev_class[None, :])
 
         # not already a member of the PG
         not_member = ~self.member[self.sh_pg[rows]]           # (R,n)
@@ -295,8 +267,9 @@ class DenseState:
         dom_ok = peer <= 0
 
         # capacity fit
-        cap_ok = (self.used[None, :] + sizes
-                  <= self.cap[None, :] * (1.0 - cfg.headroom))
+        cap_ok = legality.capacity_ok(
+            self.used[None, :], legality.capacity_limit(self.cap[None, :],
+                                                        cfg.headroom), sizes)
 
         # ideal-count criterion
         pool_rows = self.sh_pool[rows]
@@ -304,32 +277,23 @@ class DenseState:
         ideal = self.ideal[pool_rows]                         # (R,n)
         src_cnt = cnt[np.arange(len(rows)), src_idx]
         src_ideal = ideal[np.arange(len(rows)), src_idx]
-        src_ok = (np.abs(src_cnt - 1 - src_ideal)
-                  <= np.abs(src_cnt - src_ideal) + cfg.count_slack)
-        dst_ok = (np.abs(cnt + 1 - ideal) <= np.abs(cnt - ideal)
-                  + cfg.count_slack)
+        src_ok = legality.src_count_ok(src_cnt, src_ideal, cfg.count_slack)
+        dst_ok = legality.dst_count_ok(cnt, ideal, cfg.count_slack)
 
         # exact variance delta < 0 (strict improvement)
         u = self.util
-        n_f = float(n)
-        v_s = (self.used[src_idx] - sizes) / self.cap[src_idx]   # (R,1)
-        v_d = (self.used[None, :] + sizes) / self.cap[None, :]   # (R,n)
-        dsum = (v_s - u[src_idx]) + (v_d - u[None, :])
-        dsq = (v_s**2 - u[src_idx]**2) + (v_d**2 - u[None, :]**2)
-        new_var = (self.util_sumsq + dsq) / n_f - ((self.util_sum + dsum) / n_f) ** 2
-        old_var = self.util_sumsq / n_f - (self.util_sum / n_f) ** 2
-        var_ok = (new_var - old_var) < -cfg.min_variance_delta
+        var_ok = legality.variance_improves(
+            self.used[src_idx], self.used[None, :], self.cap[src_idx],
+            self.cap[None, :], u[src_idx], u[None, :], sizes,
+            self.util_sum, self.util_sumsq, float(n),
+            cfg.min_variance_delta)
 
         # the faithful loop scans destinations emptiest-first and stops at
-        # the source's own rank: only strictly-emptier devices (ties by
-        # lower index, the stable-argsort order) are ever considered —
-        # with heterogeneous capacities a fuller destination can still
-        # pass the variance test, so this cutoff must be explicit
-        u_src = u[src_idx]
-        before_src = (u < u_src) | ((u == u_src)
-                                    & (np.arange(n) < src_idx))
+        # the source's own rank (see legality.before_source)
+        before_src = legality.before_source(u, u[src_idx], np.arange(n),
+                                            src_idx)
 
-        valid = (class_ok & not_member & dom_ok & cap_ok & dst_ok & var_ok
+        valid = (cls_ok & not_member & dom_ok & cap_ok & dst_ok & var_ok
                  & src_ok[:, None] & self.dev_in[None, :]
                  & before_src[None, :])
         valid[:, src_idx] = False
@@ -366,24 +330,22 @@ if _HAVE_JAX:
         """
         R = sizes.shape[0]
         sizes_c = sizes[:, None]
-        class_ok = (cls[:, None] < 0) | (dev_class[None, :] == cls[:, None])
+        cls_ok = legality.class_ok(cls[:, None], dev_class[None, :])
         not_member = ~member
         dom_ok = (peer_occ - own_dom_eq[None, :].astype(peer_occ.dtype)) <= 0
-        cap_ok = used[None, :] + sizes_c <= cap[None, :] * (1.0 - headroom)
-        src_ok = (jnp.abs(src_cnt - 1 - src_ideal)
-                  <= jnp.abs(src_cnt - src_ideal) + count_slack)
-        dst_ok = jnp.abs(cnt + 1 - ideal) <= jnp.abs(cnt - ideal) + count_slack
+        cap_ok = legality.capacity_ok(
+            used[None, :], legality.capacity_limit(cap[None, :], headroom),
+            sizes_c)
+        src_ok = legality.src_count_ok(src_cnt, src_ideal, count_slack)
+        dst_ok = legality.dst_count_ok(cnt, ideal, count_slack)
 
         n_f = jnp.asarray(n_dev, sizes.dtype)
-        v_s = (used[src_idx] - sizes_c) / cap[src_idx]
-        v_d = (used[None, :] + sizes_c) / cap[None, :]
-        dsum = (v_s - util[src_idx]) + (v_d - util[None, :])
-        dsq = (v_s**2 - util[src_idx]**2) + (v_d**2 - util[None, :]**2)
-        new_var = (util_sumsq + dsq) / n_f - ((util_sum + dsum) / n_f) ** 2
-        old_var = util_sumsq / n_f - (util_sum / n_f) ** 2
-        var_ok = (new_var - old_var) < -min_variance_delta
+        var_ok = legality.variance_improves(
+            used[src_idx], used[None, :], cap[src_idx], cap[None, :],
+            util[src_idx], util[None, :], sizes_c, util_sum, util_sumsq,
+            n_f, min_variance_delta)
 
-        valid = (class_ok & not_member & dom_ok & cap_ok & dst_ok & var_ok
+        valid = (cls_ok & not_member & dom_ok & cap_ok & dst_ok & var_ok
                  & src_ok[:, None] & (sizes_c > 0))
         valid = valid.at[:, src_idx].set(False)
 
@@ -402,7 +364,7 @@ if _HAVE_JAX:
 def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                   record_trajectory: bool = False, use_jax: bool = False,
                   pad_rows: int = 256, record_free_space: bool = True,
-                  engine: str | None = None):
+                  engine: str | None = None, stats_out: dict | None = None):
     """Drop-in replacement for :func:`repro.core.equilibrium.balance` with
     identical outputs (move-for-move) and 1–3 orders of magnitude less
     planning time on paper-scale clusters.  Library-internal engine entry;
@@ -432,17 +394,21 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
             from .equilibrium_batch import _balance_batch
             return _balance_batch(state, cfg,
                                   record_trajectory=record_trajectory,
-                                  record_free_space=record_free_space)
+                                  record_free_space=record_free_space,
+                                  stats_out=stats_out)
         engine = "numpy"                        # pragma: no cover
     use_legacy_jax = engine == "jax-legacy" and _HAVE_JAX
 
+    from .equilibrium import (_tail_flush, _tail_record, _tail_stats,
+                              _tail_terminal)
     dense = DenseState(state)
     movements: list[Movement] = []
     records: list[MoveRecord] = []
+    acc = _tail_stats(stats_out)
 
     while len(movements) < cfg.max_moves:
         t0 = time.perf_counter()
-        src_order = np.argsort(-dense.util, kind="stable")[: cfg.k]
+        src_order = legality.fullest_first(dense.util)[: cfg.k]
         picked = None
         tried = 0
         for src_idx in src_order:
@@ -460,10 +426,13 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 break
         dt = time.perf_counter() - t0
         if picked is None:
+            _tail_terminal(acc, dt)
             break
         row, dst_idx = picked
+        t1 = time.perf_counter()
         mv = dense.apply_row(row, dst_idx)
         state.apply(mv)
+        _tail_record(acc, tried, dt, time.perf_counter() - t1)
         movements.append(mv)
         if record_trajectory:
             records.append(MoveRecord(
@@ -474,6 +443,7 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 planning_seconds=dt,
                 sources_tried=tried,
             ))
+    _tail_flush(acc)
     return movements, records
 
 
@@ -508,9 +478,8 @@ def _pick_jax(dense: DenseState, rows: np.ndarray, src_idx: int,
     # out devices and destinations at/after the source's utilization rank
     # are folded into the membership mask (each excludes a destination),
     # keeping the jitted kernel's signature stable
-    u_src = dense.util[src_idx]
-    before_src = (dense.util < u_src) | ((dense.util == u_src)
-                                         & (np.arange(n) < src_idx))
+    before_src = legality.before_source(dense.util, dense.util[src_idx],
+                                        np.arange(n), src_idx)
     member = padded(dense.member[dense.sh_pg[rows]]
                     | ~dense.dev_in[None, :] | ~before_src[None, :], True)
     # peer occupancy with the shard's own source domain already subtracted

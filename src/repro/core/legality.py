@@ -1,0 +1,200 @@
+"""Shared legality core: the single home of Equilibrium's move-legality
+and criterion math (PR 4).
+
+Every engine answers the same §3.1 question per candidate move — is the
+destination's class right, is the PG/failure-domain placement still
+valid, do both endpoints' ideal-count criteria hold, does the move fit,
+does cluster variance strictly improve, and is the destination strictly
+before the source in the emptiest-first scan order?  Until PR 4 the
+bitwise-critical expressions behind those answers were *re-declared*
+(with slight phrasing drift) in ``equilibrium.py``, ``equilibrium_jax.py``
+and ``equilibrium_batch.py``, so nothing could be cached or incrementally
+maintained in one place and bit-identity between engines was enforced by
+parallel maintenance instead of by construction.
+
+This module owns them all:
+
+* the id-numbering of device classes and failure-domain tokens
+  (:func:`device_class_ids`, :func:`device_domain_ids`) plus the
+  :class:`LegalityState` struct bundling the per-device mask inputs
+  (class ids, domain ids, in-mask, capacities) that both a full
+  ``DenseState`` build and the batch engine's delta absorption construct
+  with the *same* calls;
+* the destination/source ideal-count criteria (:func:`dst_count_ok`,
+  :func:`src_count_ok`);
+* class matching (:func:`class_ok`), capacity fit (:func:`capacity_ok`
+  over :func:`capacity_limit`), and out-mask handling (an out device is
+  never a legal destination, independent of ``count_slack`` —
+  ``LegalityState.dev_in``);
+* the exact O(1) variance-delta acceptance test
+  (:func:`variance_improves`) and its ingredients
+  (:func:`variance_from_moments`);
+* the faithful planner's emptiest-first destination cutoff
+  (:func:`before_source`) and fullest-first source order
+  (:func:`fullest_first`).
+
+Everything here is a pure function, written with operators both NumPy
+and ``jax.numpy`` arrays implement, so the *same* code traces into the
+batch engine's jitted kernels and evaluates the dense engines'
+host-side masks — bit-identical by construction.  The companion AST
+guard (``tools/check_legality.py``, run by CI's api-smoke job and
+tier-1) fails the build if any engine re-declares one of these names
+outside this module.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+#: failure-domain hierarchy every engine indexes by (level id = position)
+LEVELS: tuple[str, ...] = ("osd", "host", "rack", "datacenter")
+
+
+# ---------------------------------------------------------------------------
+# Id numbering (host-side, NumPy)
+
+
+def device_class_ids(devices) -> tuple[dict, np.ndarray]:
+    """Dense ids for the sorted device-class set + per-device id vector."""
+    class_id = {c: i for i, c in
+                enumerate(sorted({d.device_class for d in devices}))}
+    return class_id, np.array([class_id[d.device_class] for d in devices])
+
+
+def device_domain_ids(devices, levels=LEVELS) -> tuple[np.ndarray, dict]:
+    """(len(levels), n_dev) failure-domain token ids (first-seen order
+    per level, so appending devices never renumbers existing ids), plus
+    the tokens-per-level counts."""
+    arr = np.empty((len(levels), len(devices)), dtype=np.int64)
+    n_domains = {}
+    for li, lvl in enumerate(levels):
+        toks: dict[str, int] = {}
+        for i, d in enumerate(devices):
+            arr[li, i] = toks.setdefault(d.domain(lvl), len(toks))
+        n_domains[lvl] = len(toks)
+    return arr, n_domains
+
+
+def rule_slot_steps(rule) -> list[tuple[int, int, int, str, str | None]]:
+    """Per-slot placement-rule geometry: for each slot of ``rule``, the
+    ``(step_index, step_first_slot, step_count, failure_domain,
+    device_class)`` of the step governing it.  The single source of the
+    slot→step mapping both a cold ``DenseState`` build and the batch
+    engine's pool-create absorption walk — shared so an absorbed carry
+    cannot drift from a rebuilt one."""
+    out = []
+    base = 0
+    for si, step in enumerate(rule.steps):
+        for _ in range(step.count):
+            out.append((si, base, step.count, step.failure_domain,
+                        step.device_class))
+        base += step.count
+    return out
+
+
+@dataclass
+class LegalityState:
+    """The per-device inputs of every legality mask, in one struct.
+
+    Built with :meth:`from_cluster` by both ``DenseState.__init__`` and
+    ``BatchPlanner._absorb`` — the only two places a device-axis view is
+    (re)constructed — so the id numbering and masks cannot drift between
+    a cold build and an absorbed carry.
+    """
+
+    class_id: dict                  # device-class -> dense id
+    dev_class: np.ndarray           # (n_dev,) dense class ids
+    levels: tuple[str, ...]         # failure-domain hierarchy
+    dev_domain_arr: np.ndarray      # (n_levels, n_dev) domain token ids
+    n_domains: dict                 # level -> token count
+    dev_in: np.ndarray              # (n_dev,) bool: weighted ("in") devices
+    cap: np.ndarray                 # (n_dev,) capacities, float64
+
+    @classmethod
+    def from_cluster(cls, state, levels: tuple[str, ...] = LEVELS
+                     ) -> "LegalityState":
+        class_id, dev_class = device_class_ids(state.devices)
+        dev_domain_arr, n_domains = device_domain_ids(state.devices, levels)
+        return cls(class_id=class_id, dev_class=dev_class, levels=levels,
+                   dev_domain_arr=dev_domain_arr, n_domains=n_domains,
+                   dev_in=state.in_mask(),
+                   cap=state.capacity_vector())
+
+    @property
+    def n_dev(self) -> int:
+        return self.dev_class.shape[0]
+
+    def dev_domain(self, level: str) -> np.ndarray:
+        return self.dev_domain_arr[self.levels.index(level)]
+
+
+# ---------------------------------------------------------------------------
+# Masks and criteria (array-library agnostic: NumPy in the dense engines,
+# jax.numpy inside the batch engine's jitted kernels — same expressions,
+# bit-identical results)
+
+
+def class_ok(shard_class, dev_class):
+    """Destination class matches the shard's rule step (-1 = any class)."""
+    return (shard_class < 0) | (dev_class == shard_class)
+
+
+def dst_count_ok(pool_counts, ideal, slack):
+    """§3.1 destination ideal-count criterion: gaining a shard moves the
+    destination toward (or within ``slack`` of) its ideal pool count."""
+    return abs(pool_counts + 1.0 - ideal) <= abs(pool_counts - ideal) + slack
+
+
+def src_count_ok(pool_counts, ideal, slack):
+    """§3.1 source ideal-count criterion: losing a shard moves the source
+    toward (or within ``slack`` of) its ideal pool count."""
+    return abs(pool_counts - 1.0 - ideal) <= abs(pool_counts - ideal) + slack
+
+
+def capacity_limit(cap, headroom):
+    """Usable bytes per device with ``headroom`` fraction kept free."""
+    return cap * (1.0 - headroom)
+
+
+def capacity_ok(used, cap_limit, size):
+    """The shard fits on the destination under the headroom limit."""
+    return used + size <= cap_limit
+
+
+def variance_from_moments(util_sum, util_sumsq, n_dev):
+    """Cluster utilization variance from the two maintained moments."""
+    return util_sumsq / n_dev - (util_sum / n_dev) ** 2
+
+
+def variance_improves(used_src, used_dst, cap_src, cap_dst, util_src,
+                      util_dst, size, util_sum, util_sumsq, n_dev,
+                      min_variance_delta):
+    """Exact O(1) variance acceptance: moving ``size`` bytes src→dst must
+    reduce cluster utilization variance by more than
+    ``min_variance_delta``.  All engines accept/reject through this one
+    expression (same operand order, so float64 results are bitwise equal
+    across engines for broadcast-compatible operands)."""
+    v_s = (used_src - size) / cap_src
+    v_d = (used_dst + size) / cap_dst
+    dsum = (v_s - util_src) + (v_d - util_dst)
+    dsq = (v_s ** 2 - util_src ** 2) + (v_d ** 2 - util_dst ** 2)
+    new_var = (util_sumsq + dsq) / n_dev - ((util_sum + dsum) / n_dev) ** 2
+    old_var = variance_from_moments(util_sum, util_sumsq, n_dev)
+    return (new_var - old_var) < -min_variance_delta
+
+
+def before_source(util, util_src, dev_index, src_index):
+    """The faithful planner scans destinations emptiest-first and stops at
+    the source's own rank: only devices *strictly before* the source in
+    the stable (util ascending, index ascending) order are candidates —
+    with heterogeneous capacities a fuller destination can still pass the
+    variance test, so this cutoff must be explicit in every engine."""
+    return (util < util_src) | ((util == util_src) & (dev_index < src_index))
+
+
+def fullest_first(util) -> np.ndarray:
+    """Stable fullest-first device order — the §3.1 source scan order and
+    the batch carry's maintained ``order`` invariant."""
+    return np.argsort(-util, kind="stable")

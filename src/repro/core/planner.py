@@ -221,12 +221,14 @@ class FaithfulEquilibriumPlanner(_StatelessPlanner):
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
         t0 = time.perf_counter()
+        aux: dict = {}
         moves, records = _balance(state, _with_budget(self.cfg, budget),
                                   record_trajectory=record_trajectory,
-                                  record_free_space=record_free_space)
+                                  record_free_space=record_free_space,
+                                  stats_out=aux)
         return PlanResult(moves, records, self.name, stats={
             "planning_seconds": time.perf_counter() - t0,
-            "budget": budget, "engine": "faithful"})
+            "budget": budget, "engine": "faithful", **aux})
 
 
 class _DensePlanner(_StatelessPlanner):
@@ -241,13 +243,15 @@ class _DensePlanner(_StatelessPlanner):
              record_free_space=True):
         from .equilibrium_jax import _balance_fast
         t0 = time.perf_counter()
+        aux: dict = {}
         moves, records = _balance_fast(
             state, _with_budget(self.cfg, budget),
             record_trajectory=record_trajectory,
-            record_free_space=record_free_space, engine=self.engine)
+            record_free_space=record_free_space, engine=self.engine,
+            stats_out=aux)
         return PlanResult(moves, records, self.name, stats={
             "planning_seconds": time.perf_counter() - t0,
-            "budget": budget, "engine": self.engine})
+            "budget": budget, "engine": self.engine, **aux})
 
 
 @register_planner("equilibrium", sim_config_attr="equilibrium",
@@ -268,8 +272,9 @@ class LegacyJaxEquilibriumPlanner(_DensePlanner):
 
 @register_planner("equilibrium_batch", sim_config_attr="equilibrium",
                   description="device-resident chunked engine; warm-starts "
-                              "across calls and absorbs pool-growth / "
-                              "device-add deltas without a rebuild")
+                              "across calls and absorbs every known delta "
+                              "type (growth, add, out, movement, pool "
+                              "create) without a rebuild")
 class BatchEquilibriumPlanner:
     """Protocol adapter over :class:`~repro.core.equilibrium_batch
     .BatchPlanner`.
@@ -287,13 +292,15 @@ class BatchEquilibriumPlanner:
     def __init__(self, cfg: EquilibriumConfig | None = None, chunk: int = 64,
                  source_block: int = 1, row_block: int = 8,
                  row_capacity: int | None = None,
-                 select_backend: str = "auto", warm: bool = True):
+                 select_backend: str = "auto", warm: bool = True,
+                 legality_cache: bool = True):
         self.cfg = cfg or EquilibriumConfig()
         self.warm = warm
         self._engine_kwargs = dict(chunk=chunk, source_block=source_block,
                                    row_block=row_block,
                                    row_capacity=row_capacity,
-                                   select_backend=select_backend)
+                                   select_backend=select_backend,
+                                   legality_cache=legality_cache)
         self._impl = None                # BatchPlanner, bound lazily
         self._fallback = None            # numpy planner when JAX is absent
 
@@ -319,14 +326,16 @@ class BatchEquilibriumPlanner:
             impl.reset()
         t0 = time.perf_counter()
         rebuilds0 = dense_rebuild_count()
+        aux: dict = {}
         moves, records = impl.plan(max_moves=budget,
                                    record_trajectory=record_trajectory,
-                                   record_free_space=record_free_space)
+                                   record_free_space=record_free_space,
+                                   stats_out=aux)
         return PlanResult(moves, records, self.name, stats={
             "planning_seconds": time.perf_counter() - t0,
             "budget": budget, "engine": "batch", "warm": self.warm,
             "rebuilds": dense_rebuild_count() - rebuilds0,
-            "absorbed_deltas": impl._absorbed_deltas})
+            "absorbed_deltas": impl._absorbed_deltas, **aux})
 
     def observe(self, delta: ClusterDelta) -> bool:
         if self._impl is None:

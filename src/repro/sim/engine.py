@@ -23,8 +23,10 @@ Semantics mirror how Ceph actually executes placement changes:
   their device-resident carry; because every state mutation this engine
   performs goes through a :class:`~repro.core.cluster.ClusterState`
   mutator, the typed :class:`~repro.core.cluster.ClusterDelta` stream
-  reaches the planner automatically and small mutations (pool growth,
-  device adds) are absorbed without a dense rebuild.
+  reaches the planner automatically and every event class this engine
+  emits — pool growth, device adds, outs/fails (an out-delta plus the
+  drain's movement burst), pool creates — is absorbed without a dense
+  rebuild, so a lifecycle builds the dense mirror exactly once.
 
 Determinism: one seeded generator drives every random draw (re-placement
 destinations, CRUSH subset selection, new-pool jitter) in a fixed order,
@@ -105,9 +107,13 @@ class ScenarioEngine:
 
         The planner's own config comes from the SimConfig field its
         registration names (``sim_config_attr``); ``chunk`` is aligned to
-        the per-tick budget so warm planners never hold an overshoot
-        stash across ticks (a non-empty stash forces delta absorption to
-        fall back to a rebuild).  Unaccepted kwargs are dropped by
+        the per-tick budget purely as a latency default — the device
+        plans no further than the tick can emit.  (Before PR 4 this
+        alignment was load-bearing: a non-empty overshoot stash forced
+        delta absorption to fall back to a dense rebuild.  Absorption now
+        covers every known delta type with or without a stash, so warm
+        planners stay warm across arbitrary timelines regardless of
+        chunk geometry.)  Unaccepted kwargs are dropped by
         :func:`~repro.core.planner.create_planner`.
         """
         spec = get_planner_spec(cfg.balancer)    # ValueError when unknown

@@ -20,5 +20,31 @@ def test_no_deprecated_entry_points_inside_src():
     assert proc.returncode == 0, proc.stderr
 
 
+def test_no_legality_redeclaration_inside_src():
+    """No engine re-declares legality/criterion math outside
+    repro/core/legality.py, and every engine imports the shared core
+    (the PR-4 bit-identity-by-construction guard)."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_legality.py"),
+         "--root", str(REPO / "src")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_legality_guard_catches_redeclaration(tmp_path):
+    """The guard actually fires: a module defining dst_count_ok outside
+    the legality core must be flagged."""
+    bad = tmp_path / "repro" / "core"
+    bad.mkdir(parents=True)
+    (bad / "rogue.py").write_text(
+        "def dst_count_ok(c, i, s):\n    return True\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_legality.py"),
+         "--root", str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "dst_count_ok" in proc.stderr
+
+
 def test_sim_balancers_mirror_registry():
     assert BALANCERS == available_planners()

@@ -53,6 +53,7 @@ def arch_setup(request):
     return arch, cfg, params
 
 
+@pytest.mark.slow
 def test_train_step_smoke(arch_setup):
     arch, cfg, params = arch_setup
     batch = small_batch(cfg, jax.random.PRNGKey(1))
@@ -88,6 +89,7 @@ def test_decode_step_smoke(arch_setup):
     assert np.isfinite(np.asarray(logits2, np.float32)).all()
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_dense():
     """Greedy decode logits must match teacher-forced forward logits for a
     dense arch (cache correctness)."""
@@ -107,6 +109,7 @@ def test_decode_matches_prefill_dense():
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_ssm():
     """Recurrent decode must match the chunked SSD train path (state-space
     duality — the two forms compute the same sequence map)."""
@@ -125,6 +128,7 @@ def test_decode_matches_prefill_ssm():
                                rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.slow
 def test_swa_rolling_cache_mixtral():
     """All-SWA rolling cache: decode beyond the window keeps shapes static
     and logits finite; cache buffer length == window."""

@@ -47,6 +47,7 @@ def test_flash_fwd_shapes_dtypes(T, Dh, dtype):
     (None, None, True), (32, None, True), (None, 50.0, True),
     (48, 30.0, True), (None, None, False),
 ])
+@pytest.mark.slow
 def test_flash_fwd_mask_variants(window, cap, causal):
     key = jax.random.PRNGKey(1)
     ks = jax.random.split(key, 3)
@@ -135,6 +136,7 @@ def test_masked_select_all_invalid_row():
     (64, 16, 16, 64, jnp.float32),   # single chunk
     (64, 16, 16, 16, jnp.bfloat16),
 ])
+@pytest.mark.slow
 def test_ssd_scan_shapes_dtypes(T, P, N, chunk, dtype):
     key = jax.random.PRNGKey(3)
     ks = jax.random.split(key, 5)

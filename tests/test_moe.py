@@ -39,6 +39,7 @@ def dense_oracle(p, x, cfg):
     return y
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("E,k", [(4, 1), (4, 2), (8, 2), (8, 4)])
 def test_dispatch_matches_dense_oracle(E, k):
     cfg, p, x = make(dict(n_experts=E, top_k=k, capacity_factor=8.0),
@@ -63,6 +64,7 @@ def test_capacity_drops_are_zero_not_garbage():
     assert zero.any(), "capacity 0.25 must drop something"
 
 
+@pytest.mark.slow
 def test_moe_grads_flow_to_all_parts():
     cfg, p, x = make(dict(n_experts=4, top_k=2, capacity_factor=2.0),
                      jax.random.PRNGKey(2))

@@ -10,8 +10,9 @@ import json
 import pytest
 
 from repro.core import (Device, EquilibriumConfig, MgrBalancerConfig,
-                        PlanResult, Planner, TiB, available_planners,
-                        create_planner, get_planner_spec, small_test_cluster)
+                        Movement, PlanResult, Planner, TiB,
+                        available_planners, create_planner, get_planner_spec,
+                        small_test_cluster)
 from repro.core.cluster import (DeviceAddDelta, DeviceOutDelta, MovementDelta,
                                 PoolCreateDelta, PoolGrowthDelta)
 from repro.core.equilibrium import _balance
@@ -259,19 +260,120 @@ def _foreign_move(state):
     state.apply(mv[0])
 
 
+def _create_pool(state):
+    from repro.core import PlacementRule, Pool
+    from repro.core.crush import place_pg
+    pid = 1 + max(state.pools)
+    rule = PlacementRule.replicated(2, "host", "hdd")
+    pool = Pool(pid, "fresh", 8, rule, stored_bytes=0.4 * TiB)
+    acting = {(pid, i): place_pg(state.devices, pool, i, seed=3)
+              for i in range(8)}
+    sizes = {(pid, i): pool.nominal_shard_size for i in range(8)}
+    state.add_pool(pool, acting, sizes)
+
+
 @pytest.mark.parametrize("mutate", [
     lambda s: s.mark_out(s.devices[1].id),
     _foreign_move,
-], ids=["device-out", "foreign-movement"])
-def test_non_absorbable_deltas_rebuild_and_stay_identical(mutate):
+    _create_pool,
+], ids=["device-out", "foreign-movement", "pool-create"])
+def test_full_coverage_deltas_absorbed_without_rebuild(mutate):
+    """PR 4 closes the absorption gaps: device out, a foreign balancer's
+    movement, and pool creation all absorb into the device carry — zero
+    dense rebuilds, continuation bit-identical to a cold start."""
+    assert _warm_vs_cold(mutate) == 0
+
+
+def test_device_back_in_absorbed_without_rebuild():
+    def mutate(state):
+        state.mark_out(state.devices[1].id)
+        state.mark_out(state.devices[1].id, out=False)
+    assert _warm_vs_cold(mutate) == 0
+
+
+def test_drain_like_mix_absorbed_without_rebuild():
+    """The churn shape the sim engine produces on a DeviceOut/DeviceFail:
+    one out-delta followed by a burst of re-placement movements — all
+    absorbed in a single gap."""
+    def mutate(state):
+        out = state.devices[2].id
+        state.mark_out(out)
+        for (pg, slot) in sorted(state.shards_on[out]):
+            for dst in state.devices:
+                if state.move_is_legal(pg, slot, dst.id):
+                    state.apply(Movement(pg, slot, out, dst.id,
+                                         state.shard_sizes[pg]))
+                    break
+    assert _warm_vs_cold(mutate) == 0
+
+
+def test_wider_rule_pool_create_absorbed():
+    """A created pool whose rule is wider than any existing one grows
+    the acting table's slot axis (a recompile, not a rebuild) — still
+    absorbed, still bit-identical."""
+    def mutate(state):
+        from repro.core import PlacementRule, Pool
+        from repro.core.crush import place_pg
+        rule = PlacementRule.erasure(3, 2, "host", "hdd")    # size 5 > 3
+        pid = 1 + max(state.pools)
+        pool = Pool(pid, "wide-ec", 12, rule, ec_k=3,
+                    stored_bytes=2.0 * TiB)
+        acting = {(pid, i): place_pg(state.devices, pool, i, seed=9)
+                  for i in range(12)}
+        sizes = {(pid, i): pool.nominal_shard_size for i in range(12)}
+        state.add_pool(pool, acting, sizes)
+    assert _warm_vs_cold(mutate) == 0
+
+
+def test_unknown_delta_type_falls_back_to_rebuild():
+    """The conservative fallback survives for delta types the absorber
+    does not know — correctness never depends on absorption."""
+    from dataclasses import dataclass
+
+    from repro.core import ClusterDelta
+
+    @dataclass(frozen=True)
+    class WeirdDelta(ClusterDelta):
+        pass
+
+    def mutate(state):
+        state.mutation_epoch += 1
+        state._notify(WeirdDelta(state.mutation_epoch))
+
     assert _warm_vs_cold(mutate) == 1
 
 
-def test_overshoot_stash_forces_rebuild_on_growth():
+def test_renumbering_pool_id_falls_back_to_rebuild():
+    """A pool id sorting before an existing one would renumber the
+    carry's dense pool/pg/shard rows: absorption must refuse and
+    rebuild, staying bit-identical."""
+    from repro.core import PlacementRule, Pool, build_cluster
+    from repro.core.crush import place_pg
+    devs = small_test_cluster().devices
+    rule = PlacementRule.replicated(3, "host", "hdd")
+    state = build_cluster(devs, [
+        Pool(0, "a", 32, rule, stored_bytes=120 * TiB),
+        Pool(5, "b", 16, rule, stored_bytes=60 * TiB)], seed=1)
+    planner = create_planner("equilibrium_batch", chunk=5)
+    planner.plan(state, budget=5)
+    pool = Pool(3, "mid", 8, rule, stored_bytes=5 * TiB)   # sorts between
+    acting = {(3, i): place_pg(devs, pool, i, seed=1) for i in range(8)}
+    sizes = {(3, i): pool.nominal_shard_size for i in range(8)}
+    state.add_pool(pool, acting, sizes)
+    cold, _ = _balance(state.copy(), EquilibriumConfig())
+    before = dense_rebuild_count()
+    warm = planner.plan(state)
+    assert tup(warm.moves) == tup(cold)
+    assert dense_rebuild_count() - before == 1
+
+
+def test_growth_absorbed_into_overshoot_stash():
     """chunk > budget leaves device-planned overshoot in the stash; that
-    continuation predates the growth, so absorption must refuse."""
+    continuation predates the growth, so the absorber discards it and
+    re-derives the carry from the mutated state — no rebuild, and the
+    emitted stream still equals a cold start (the stash fix, PR 4)."""
     assert _warm_vs_cold(lambda s: s.grow_pool(0, 2.0 * TiB),
-                         chunk=64, first_budget=5) == 1
+                         chunk=64, first_budget=5) == 0
 
 
 def test_observe_reports_absorbability():
@@ -282,8 +384,10 @@ def test_observe_reports_absorbability():
     state.grow_pool(0, 1.0 * TiB)
     assert impl.observe(PoolGrowthDelta(state.mutation_epoch, 0, 1.0 * TiB))
     state.mark_out(state.devices[0].id)
-    assert not impl.observe(
+    assert impl.observe(
         DeviceOutDelta(state.mutation_epoch, state.devices[0].id, True))
+    # an unstamped delta cannot be ordered into the stream: not absorbable
+    assert not impl.observe(PoolGrowthDelta(-1, 0, 1.0 * TiB))
 
 
 def test_conflicting_epoch_claim_forces_rebuild_not_corruption():
@@ -347,6 +451,7 @@ def test_steady_growth_rebuilds_at_most_once():
     assert dense_rebuild_count() - before <= 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
 def test_scenario_warm_batch_identical_to_cold(name):
     """Byte-identical metrics between the warm-started batch planner and

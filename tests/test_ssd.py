@@ -53,6 +53,7 @@ def test_chunked_matches_recurrence(chunk, superchunk):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_chunked_gradients_finite():
     x, dt, A, Bm, Cm = make_inputs(jax.random.PRNGKey(1))
 
@@ -65,6 +66,7 @@ def test_chunked_gradients_finite():
         assert np.isfinite(np.asarray(g)).all()
 
 
+@pytest.mark.slow
 def test_chunked_gradient_matches_naive_jax():
     """Grad through the chunked+checkpointed form == grad through a jax
     scan recurrence (AD correctness of the duality + remat)."""

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Fail if any module inside ``src/`` re-declares legality math outside
+``repro/core/legality.py``.
+
+PR 4 extracted the bitwise-critical legality/criterion expressions —
+id numbering, the ideal-count criteria, capacity fit, the exact
+variance-delta acceptance, the emptiest-first cutoff — into the shared
+legality core so bit-identity across the three engines is enforced by
+construction.  Re-declaring one of those names in an engine (a ``def``
+or an assignment, under any scope) would quietly reintroduce the
+parallel-maintenance failure mode this refactor removed; importing them
+is of course fine.  The engine modules are additionally required to
+import from the legality core at all, so a rewrite that simply stops
+using it fails loudly too.  Run by CI's api-smoke job and by
+tests/test_api_surface.py.
+
+    python tools/check_legality.py [--root PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+#: names owned by repro/core/legality.py — the legality vocabulary no
+#: other module under src/ may define or rebind
+LEGALITY_NAMES = {
+    "device_class_ids", "device_domain_ids", "LegalityState", "LEVELS",
+    "class_ok", "dst_count_ok", "src_count_ok", "capacity_limit",
+    "capacity_ok", "variance_from_moments", "variance_improves",
+    "before_source", "fullest_first",
+}
+
+#: the one module allowed to define the vocabulary
+HOME = "repro/core/legality.py"
+
+#: engine modules that must import the legality core (the refactor's
+#: consumers; dropping the import would mean re-derived expressions)
+MUST_IMPORT = (
+    "repro/core/equilibrium.py",
+    "repro/core/equilibrium_jax.py",
+    "repro/core/equilibrium_batch.py",
+)
+
+
+def _imports_legality(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "legality" or mod.endswith(".legality"):
+                return True
+            if any(a.name == "legality" for a in node.names):
+                return True
+        elif isinstance(node, ast.Import):
+            if any(a.name.rsplit(".", 1)[-1] == "legality"
+                   for a in node.names):
+                return True
+    return False
+
+
+def _check_file(path: pathlib.Path, rel: str) -> list[str]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    violations = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if node.name in LEGALITY_NAMES:
+                violations.append(
+                    f"{rel}:{node.lineno}: re-declares legality-core name "
+                    f"{node.name!r}; import it from repro.core.legality")
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            # catches every rebinding form: plain/annotated/augmented
+            # assignment, walrus, for-targets, comprehensions, with-as
+            if node.id in LEGALITY_NAMES:
+                violations.append(
+                    f"{rel}:{node.lineno}: rebinds legality-core "
+                    f"name {node.id!r}; import it from "
+                    f"repro.core.legality")
+    if rel in MUST_IMPORT and not _imports_legality(tree):
+        violations.append(
+            f"{rel}: engine module does not import repro.core.legality — "
+            f"legality math must come from the shared core")
+    return violations
+
+
+def check(root: pathlib.Path) -> list[str]:
+    violations = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel == HOME:
+            continue
+        violations.extend(_check_file(path, rel))
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="src",
+                    help="directory to scan (default: src)")
+    args = ap.parse_args()
+    violations = check(pathlib.Path(args.root))
+    for v in violations:
+        print(v, file=sys.stderr)
+    if violations:
+        print(f"{len(violations)} legality-core violation(s) in "
+              f"{args.root}/", file=sys.stderr)
+        return 1
+    print(f"legality math declared only in {HOME}; all engines import it")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
