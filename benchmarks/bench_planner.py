@@ -135,14 +135,16 @@ def _seed_engine(state, cfg):
     return moves, {}
 
 
-#: ``batch-nocache`` disables the PR-4 cross-move legality cache — its
-#: tail share vs ``batch`` is the direct measure of the cache's win
+#: ``batch-cache`` opts into the PR-4 cross-move legality cache (now
+#: off by default — at CPU tile sizes its per-move column repair costs
+#: more than fresh evaluation); its delta vs ``batch`` tracks whether
+#: that trade ever flips on an accelerator backend
 ENGINES = (
     ("seed-jax", _seed_engine),
     ("jax-legacy", _registry_engine("equilibrium_jax_legacy")),
     ("numpy", _registry_engine("equilibrium")),
-    ("batch-nocache", _registry_engine("equilibrium_batch",
-                                       legality_cache=False)),
+    ("batch-cache", _registry_engine("equilibrium_batch",
+                                     legality_cache=True)),
     ("batch", _registry_engine("equilibrium_batch")),
 )
 
@@ -157,8 +159,16 @@ def _tail_derived(stats: dict) -> str:
     secs = stats.get("moves_seconds", 0.0)
     share = stats.get("tail_seconds", 0.0) / secs if secs > 0 else 0.0
     full = ",".join(f"{t}:{hist[t]}" for t in sorted(hist, key=int))
+    # PR-6 source-bound counters: scans skipped by a live certificate /
+    # total source-scan slots (``tried`` counts full fullest-first ranks,
+    # so skipped scans are inside the denominator)
+    hits = stats.get("bound_hits", 0)
+    pruned = stats.get("pruned_sources", 0)
+    slots = sum(int(t) * c for t, c in hist.items())
+    rate = hits / slots if slots > 0 else 0.0
     return (f";tail_moves={tail}/{total};tail_time_share={share:.2f};"
-            f"tried_hist={full}")
+            f"bound_hits={hits};pruned_sources={pruned};"
+            f"prune_rate={rate:.2f};tried_hist={full}")
 
 
 def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
@@ -197,33 +207,50 @@ def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
     return rows
 
 
-#: the cache-vs-nocache pair from ENGINES — same construction, so the
-#: tail rows benchmark exactly the planners the throughput rows do
+#: the batch/batch-cache pair from ENGINES — same construction, so the
+#: tail rows benchmark exactly the planners the throughput rows do —
+#: plus the PR-6 source-bounds opt-out: the nobounds/batch delta is the
+#: direct measure of the certificate + priority-queue tail win
 TAIL_ENGINES = tuple((label, fn) for label, fn in ENGINES
-                     if label.startswith("batch"))
+                     if label.startswith("batch")) + (
+    ("batch-nobounds", _registry_engine("equilibrium_batch",
+                                        source_bounds=False)),)
 
 
 def bench_tail(initial, tag: str, warm: int) -> list[dict]:
     """Convergence-tail benchmark: run to *full* convergence, where
-    ``sources_tried > 1`` moves dominate wall time (97% of it at cluster-B
-    scale), and compare the batch engine with and without the PR-4
-    cross-move legality cache — the nocache/cache delta is the direct
-    measure of the cache's tail win."""
+    ``sources_tried > 1`` moves dominate wall time, and compare the batch
+    engine against its variants: ``batch-cache`` (opt-in PR-4 cross-move
+    legality cache) and ``batch-nobounds`` (no PR-6 source bounds) —
+    each delta is the direct measure of that layer's tail effect.  All
+    variants must emit the identical move sequence."""
     sha = git_sha()
     rows = []
+    per_s = {}
+    tail = {}
+    counts = {}
+    sequences = {}
     for label, fn in TAIL_ENGINES:
         fn(initial.copy(), EquilibriumConfig(max_moves=warm))
         t0 = time.perf_counter()
         mv, stats = fn(initial.copy(), EquilibriumConfig())
         dt = time.perf_counter() - t0
-        per_s = len(mv) / max(dt, 1e-9)
+        per_s[label] = len(mv) / max(dt, 1e-9)
+        tail[label] = _tail_derived(stats)
+        counts[label] = len(mv)
+        sequences[label] = [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in mv]
         print(f"  tail.{tag}.{label:13s}: {len(mv)} moves to convergence, "
-              f"{dt:.1f}s ({per_s:.1f} moves/s){_tail_derived(stats)}")
+              f"{dt:.1f}s ({per_s[label]:.1f} moves/s){tail[label]}")
+    identical = all(sequences[l] == sequences["batch"]
+                    for l, _ in TAIL_ENGINES)
+    for label, _ in TAIL_ENGINES:
         rows.append({
             "name": f"planner.tail.{tag}.{label}",
-            "us_per_call": 1e6 / max(per_s, 1e-9),
-            "derived": (f"moves_per_s={per_s:.1f};converged={len(mv)}"
-                        f"{_tail_derived(stats)}"),
+            "us_per_call": 1e6 / max(per_s[label], 1e-9),
+            "derived": (f"moves_per_s={per_s[label]:.1f};"
+                        f"converged={counts[label]};"
+                        f"identical={identical}"
+                        f"{tail[label]}"),
             "git_sha": sha,
         })
     return rows
@@ -247,8 +274,8 @@ def main() -> None:
         print(f"cluster B x{scale}: {initial.n_devices} OSDs, "
               f"{len(initial.acting)} PGs (built {time.perf_counter()-t0:.0f}s)")
         rows += bench_cluster(initial, f"B{scale}x", cap=cap, warm=warm)
-        if scale == 1 and not args.quick:
-            rows += bench_tail(initial, "B1x", warm=warm)
+        if not args.quick:
+            rows += bench_tail(initial, f"B{scale}x", warm=warm)
     if args.quick:
         from repro.core.clustergen import cluster_f
         rows += bench_tail(cluster_f(), "F", warm=warm)

@@ -31,6 +31,11 @@ import numpy as np
 
 from . import legality
 from .cluster import ClusterState, Movement, PGId
+from .tail import SourceBounds
+from .tail import tail_flush as _tail_flush
+from .tail import tail_record as _tail_record
+from .tail import tail_stats as _tail_stats
+from .tail import tail_terminal as _tail_terminal
 
 
 @dataclass
@@ -103,10 +108,14 @@ class _IncrementalVariance:
 
 
 def plan_one_move(state: ClusterState, cfg: EquilibriumConfig,
-                  tracker: _IncrementalVariance) -> tuple[Movement | None, int]:
+                  tracker: _IncrementalVariance,
+                  bounds: SourceBounds | None = None
+                  ) -> tuple[Movement | None, int]:
     """Generate the next movement (or None), per §3.1.
 
-    Returns (movement, sources_tried).
+    Returns (movement, sources_tried).  ``tried`` counts ranks in the
+    full fullest-first order, so a bound-skipped source still advances
+    it — the histogram is identical with and without ``bounds``.
     """
     cap = state.capacity_vector()
     used = state.used()
@@ -117,10 +126,13 @@ def plan_one_move(state: ClusterState, cfg: EquilibriumConfig,
 
     for tried, src_idx in enumerate(src_order, start=1):
         src_idx = int(src_idx)
+        if bounds is not None and bounds.skip(src_idx):
+            continue
         src_osd = state.devices[src_idx].id
         # largest shard first (deterministic tie-break on pg id / slot)
         shards = sorted(state.shards_on[src_osd],
                         key=lambda s: (-state.shard_sizes[s[0]], s[0], s[1]))
+        saw_candidate = False
         for (pg, slot) in shards:
             size = state.shard_sizes[pg]
             if size <= 0.0:
@@ -135,80 +147,74 @@ def plan_one_move(state: ClusterState, cfg: EquilibriumConfig,
                 if not _count_criterion(state, pg, src_idx, dst_i,
                                         ideal_cache, cfg.count_slack):
                     continue
+                saw_candidate = True
                 if not tracker.improves(src_idx, dst_i, size,
                                         cfg.min_variance_delta):
                     continue        # must strictly reduce variance
                 return (Movement(pg, slot, src_osd, dst_osd, size), tried)
+        if bounds is not None and not saw_candidate:
+            # no pair passed every criterion except the variance test:
+            # the certificate holds until a surgical event invalidates it
+            largest = (state.shard_sizes[shards[0][0]] if shards else 0.0)
+            bounds.prune(src_idx, max(float(largest), 0.0))
     return None, len(src_order)
-
-
-def _tail_stats(stats_out: dict | None):
-    """Mutable convergence-tail accumulator shared by the host-loop
-    engines: a ``sources_tried`` histogram plus the selection/apply
-    wall-time split, written into ``stats_out`` (PlanResult.stats)."""
-    return {"hist": {}, "select": 0.0, "apply": 0.0, "tail": 0.0,
-            "terminal": 0.0, "out": stats_out}
-
-
-def _tail_record(acc: dict, tried: int, select_s: float,
-                 apply_s: float) -> None:
-    acc["hist"][tried] = acc["hist"].get(tried, 0) + 1
-    acc["select"] += select_s
-    acc["apply"] += apply_s
-    if tried > 1:
-        acc["tail"] += select_s + apply_s
-
-
-def _tail_terminal(acc: dict, seconds: float) -> None:
-    """Account the final fruitless scan (every source walked, no legal
-    move) — by definition the most tail-like work in a convergence run,
-    so it belongs in the tail share."""
-    acc["select"] += seconds
-    acc["tail"] += seconds
-    acc["terminal"] += seconds
-
-
-def _tail_flush(acc: dict) -> None:
-    if acc["out"] is None:
-        return
-    hist = acc["hist"]
-    acc["out"].update(
-        sources_tried_hist={str(t): hist[t] for t in sorted(hist)},
-        tail_moves=sum(c for t, c in hist.items() if t > 1),
-        tail_seconds=acc["tail"],
-        terminal_scan_seconds=acc["terminal"],
-        selection_seconds=acc["select"], apply_seconds=acc["apply"],
-        moves_seconds=acc["select"] + acc["apply"])
 
 
 def _balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
              record_trajectory: bool = False, record_free_space: bool = True,
-             stats_out: dict | None = None):
+             stats_out: dict | None = None, source_bounds: bool = False):
     """Run Equilibrium to convergence on ``state`` (mutated in place).
 
     Returns (movements, records) — ``records`` carries per-move metrics
     (variance, free space, planning time, sources tried) used by the
     Fig 4/5/6 benchmarks; ``stats_out`` (optional) receives the
     convergence-tail instrumentation (sources_tried histogram,
-    selection-vs-apply wall split).  Library-internal engine entry; the
-    public API is ``repro.core.planner.create_planner
-    ("equilibrium_faithful")``.
+    selection-vs-apply wall split, prune counters).  ``source_bounds``
+    enables the PR-6 no-candidate certificates (off by default here:
+    this engine is the bit-identity reference, so the bounds are opt-in
+    for cross-checking).  Library-internal engine entry; the public API
+    is ``repro.core.planner.create_planner("equilibrium_faithful")``.
     """
     cfg = cfg or EquilibriumConfig()
     tracker = _IncrementalVariance(state.used(), state.capacity_vector())
+    bounds = SourceBounds() if source_bounds else None
     movements: list[Movement] = []
     records: list[MoveRecord] = []
     acc = _tail_stats(stats_out)
     while len(movements) < cfg.max_moves:
         t0 = time.perf_counter()
-        mv, tried = plan_one_move(state, cfg, tracker)
+        if bounds is not None:
+            bounds.begin_scan()
+        mv, tried = plan_one_move(state, cfg, tracker, bounds)
         dt = time.perf_counter() - t0
         if mv is None:
+            if bounds is not None:
+                bounds.end_terminal_scan()
             _tail_terminal(acc, dt)
             break
         t1 = time.perf_counter()
-        tracker.commit(state.idx(mv.src_osd), state.idx(mv.dst_osd), mv.size)
+        s_i, d_i = state.idx(mv.src_osd), state.idx(mv.dst_osd)
+        if bounds is not None:
+            pool_id = mv.pg[0]
+            ideal = state.ideal_shard_count(state.pools[pool_id])
+            c_old = float(state.pool_counts[pool_id][s_i])
+            flip = bool(legality.count_flip_enables(
+                legality.dst_count_ok(c_old, ideal[s_i], cfg.count_slack),
+                legality.dst_count_ok(c_old - 1.0, ideal[s_i],
+                                      cfg.count_slack)))
+            util_before = float(tracker.util[s_i])
+            used_before = float(tracker.used[s_i])
+        tracker.commit(s_i, d_i, mv.size)
         state.apply(mv)
+        if bounds is not None:
+            holders = [state.idx(o) for o in state.acting[mv.pg]] + [s_i]
+            counts = state.pool_counts[pool_id]
+            bounds.invalidate(
+                s_i, d_i, holders, util_before, float(tracker.util[s_i]),
+                tracker.util, used_before,
+                float(legality.capacity_limit(tracker.cap[s_i],
+                                              cfg.headroom)),
+                flip, lambda s: counts[s] > 0)
         _tail_record(acc, tried, dt, time.perf_counter() - t1)
         movements.append(mv)
         if record_trajectory:
@@ -220,6 +226,11 @@ def _balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 planning_seconds=dt,
                 sources_tried=tried,
             ))
+    if bounds is not None:
+        acc["bound_hits"] = bounds.bound_hits
+        acc["pruned"] = bounds.pruned_count
+    if stats_out is not None:
+        stats_out["source_bounds"] = bool(source_bounds)
     _tail_flush(acc)
     return movements, records
 

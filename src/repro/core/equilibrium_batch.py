@@ -71,12 +71,14 @@ from .cluster import (ClusterDelta, ClusterState, DeviceAddDelta,
                       PoolCreateDelta, PoolGrowthDelta)
 from .equilibrium import EquilibriumConfig, MoveRecord
 from .legality import LegalityState
+from .tail import tail_flush, tail_record, tail_stats, tail_terminal
 
 try:  # pragma: no cover - JAX is always present in this repo
     import jax
     import jax.numpy as jnp
     from jax import lax
     from jax.experimental import enable_x64
+    from ..kernels.select_move import compact_sources
     _HAVE_JAX = True
 except Exception:  # pragma: no cover
     _HAVE_JAX = False
@@ -135,35 +137,52 @@ def _shift_insert(arr, pos, value):
 # The jitted chunk: select + apply up to `m` moves entirely on-device
 
 
-@partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached"))
+@partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached",
+                                   "bounds"))
 def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
-                k, kb, rb, m, backend, cached):
+                k, kb, rb, m, backend, cached, bounds):
     """Run up to ``m`` planning steps on-device.
 
     dyn   = (used, util, util_sum, util_sumsq, acting, pool_counts,
              dst_ok, rows_on, nrows, order,
-             cache_dev, cache_ok, cache_clean)      — mutated functionally
+             cache_dev, cache_ok, cache_clean, pruned) — mutated
+             functionally
     const = (cap, dev_class, dev_in, dev_domain, sh_size, sh_pg, sh_pool,
              sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal)
 
     ``cache_*`` is the cross-move incremental legality cache (enabled by
-    the static ``cached`` flag): per top-k source rank, the *static* half
-    of the legality tile — class match ∧ ¬PG-member ∧ failure-domain free,
-    the part whose inputs only change when a move touches the tile's
-    device or the moved PG — tagged with the device it was computed for
-    (``cache_dev``) and per-row-block validity bits (``cache_clean``).
-    ``apply_move`` repairs the cache instead of discarding it: only the
-    two touched devices' tiles and the row-blocks holding a shard of the
-    moved PG are invalidated, so the convergence-tail walk (sources_tried
-    ≫ 1 re-scanning the same fruitless sources every move) re-evaluates
-    cheap per-move criteria only.  The dynamic half (capacity fit, count
-    criteria, the exact variance delta, the emptiest-first cutoff) is
-    recomputed every tile — its inputs legitimately change every move.
-    Rank-keyed entries whose device changed (the maintained order shifted)
-    simply miss and recompute; correctness never depends on a hit.
+    the static ``cached`` flag): per top-k source rank, the tile's full
+    *candidate* mask — every criterion except the variance test: class
+    match ∧ ¬PG-member ∧ failure-domain free ∧ capacity fit ∧ both count
+    criteria ∧ the emptiest-first cutoff — tagged with the device it was
+    computed for (``cache_dev``) and per-row-block validity bits
+    (``cache_clean``).  ``apply_move`` repairs the cache instead of
+    discarding it: the two touched devices' tiles and the row-blocks
+    holding a shard of the moved PG are invalidated, and — because a
+    move's dynamic inputs only change at its two endpoints — the
+    endpoints' *destination columns* of every other cached tile are
+    recomputed in place, so a clean tile stays bitwise the fresh
+    evaluation.  Only the variance test (whose ``util_sum``/``util_sumsq``
+    inputs change globally every move) is recomputed per walk, and only
+    for tiles that hold a candidate at all.  Rank-keyed entries whose
+    device changed (the maintained order shifted) simply miss and
+    recompute; correctness never depends on a hit.
 
-    Returns (dyn', done, overflow, moves (m, 4) int32) where each move row
-    is (shard_row, src_idx, dst_idx, sources_tried) or -1 sentinels.
+    ``pruned`` is the persistent source-bound state (enabled by the
+    static ``bounds`` flag): a device is pruned when a full scan saw no
+    candidate pair on it — the one verdict the variance criterion alone
+    can never revisit, so the certificate stays valid until a move
+    perturbs a device past it (the legality-core ``bound_*`` triggers in
+    ``apply_move``).  Each step starts from the pruned-compacted source
+    queue (:func:`repro.kernels.select_move.compact_sources`) so the
+    convergence tail skips fruitless sources without touching their
+    legality tiles.
+
+    Returns (dyn', done, overflow, moves (m, 5) int32) where each move
+    row is (shard_row, src_idx, dst_idx, sources_tried, bound_skips) or
+    -1 sentinels; ``sources_tried`` counts ranks in the *full*
+    fullest-first order (identical with and without ``bounds``) and
+    ``bound_skips`` of those ranks were skipped by live certificates.
     """
     (cap, dev_class, dev_in, dev_domain, sh_size, sh_pg, sh_pool,
      sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal) = const
@@ -181,12 +200,22 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
         """One §3.1 planning step: walk (source-block, row-block) tiles of
         the batched legality tensor until the faithful winner is decided."""
         used, util, us, usq, acting, pool_counts, dst_ok, \
-            rows_on, nrows, order, c_dev, c_ok, c_clean = dyn
-        src_order = order[:k]       # maintained == argsort(-util, stable)
+            rows_on, nrows, order, c_dev, c_ok, c_clean, pruned = dyn
+        order_k = order[:k]         # maintained == argsort(-util, stable)
+        if bounds:
+            # persistent priority queue: unpruned sources first (faithful
+            # fullest-first order preserved), pruned sources parked at
+            # the back.  Parked entries contribute no rows and can
+            # neither win nor re-prune (the n_avail guards below), so the
+            # walk starts at the first plausible source.
+            src_order, n_avail = compact_sources(order_k, pruned)
+        else:
+            src_order, n_avail = order_k, jnp.int32(k)
         if k_pad > k:   # pad to a source-block multiple; masked from wins
             src_order = jnp.pad(src_order, (0, k_pad - k))
         rows_k = rows_on[src_order]         # (k_pad, r_cap), faithful order
-        n_rows_k = jnp.where(jnp.arange(k_pad) < k, nrows[src_order], 0)
+        n_rows_k = jnp.where(jnp.arange(k_pad) < n_avail,
+                             nrows[src_order], 0)
 
         def eval_static(sb, c):
             """(kb, rb, n_dev) static legality for tile (sb, c): class
@@ -220,10 +249,11 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             return legality.class_ok(cls[..., None],
                                      dev_class[None, None, :]) & ~bad
 
-        def eval_dyn(sb, c):
-            """(kb, rb, n_dev) per-move criteria for tile (sb, c): the
-            half whose inputs (used/util/counts/order) change every move
-            and is therefore never cached."""
+        def eval_cand(sb, c):
+            """(kb, rb, n_dev) *candidate* mask for tile (sb, c): every
+            criterion except the variance test — the vocabulary of the
+            no-candidate prune predicate, and (under ``cached``) the tile
+            payload the cross-move cache stores and column-repairs."""
             blk = lax.dynamic_slice(rows_k, (sb * kb, c * rb), (kb, rb))
             src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
             r = jnp.clip(blk, 0)
@@ -236,43 +266,57 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             cnt_s = pool_counts[pool, src_b[:, None]]            # (kb, rb)
             idl_s = ideal[pool, src_b[:, None]]
             src_ok = legality.src_count_ok(cnt_s, idl_s, slack)
-            # exact variance delta (the one legality-core expression)
             u_s = util[src_b][:, None, None]
-            var_ok = legality.variance_improves(
-                used[src_b][:, None, None], used[None, None, :],
-                cap[src_b][:, None, None], cap[None, None, :],
-                u_s, util[None, None, :], size[..., None],
-                us, usq, n_f, min_dvar)
             not_self = dev_iota[None, None, :] != src_b[:, None, None]
             # faithful destination cutoff (legality.before_source)
             before_src = legality.before_source(
                 util[None, None, :], u_s, dev_iota[None, None, :],
                 src_b[:, None, None])
-            return (cap_ok & crit & var_ok & (real & src_ok)[..., None]
+            return (eval_static(sb, c) & cap_ok & crit
+                    & (real & src_ok)[..., None]
                     & not_self & dev_in[None, None, :] & before_src)
 
+        def eval_var(sb, c):
+            """(kb, rb, n_dev) exact variance-delta acceptance for tile
+            (sb, c) — the one criterion whose inputs (the maintained
+            ``util_sum``/``util_sumsq`` moments) change globally every
+            move, so it is never cached and only evaluated for tiles
+            that hold a candidate at all."""
+            blk = lax.dynamic_slice(rows_k, (sb * kb, c * rb), (kb, rb))
+            src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
+            r = jnp.clip(blk, 0)
+            size = jnp.where(blk >= 0, sh_size[r], 0.0)          # (kb, rb)
+            u_s = util[src_b][:, None, None]
+            return legality.variance_improves(
+                used[src_b][:, None, None], used[None, None, :],
+                cap[src_b][:, None, None], cap[None, None, :],
+                u_s, util[None, None, :], size[..., None],
+                us, usq, n_f, min_dvar)
+
         def body(carry):
-            (sb, c, found_row, found_dst,
-             win_j, win_row, win_dst, done, c_dev, c_ok, c_clean) = carry
+            (sb, c, found_row, found_dst, win_j, win_row, win_dst, done,
+             c_dev, c_ok, c_clean, marg, pruned) = carry
+            src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
             if cached:
                 zero = jnp.int32(0)
-                src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
                 tags = lax.dynamic_slice_in_dim(c_dev, sb * kb, kb)
                 clean_b = lax.dynamic_slice(c_clean, (sb * kb, c),
                                             (kb, 1))[:, 0]
                 hit = jnp.all((tags == src_b) & clean_b)
-                # only the expensive static evaluation is conditional —
-                # the large cache buffers stay *outside* the cond (a
+                # only the expensive evaluation is conditional — the
+                # large cache buffers stay *outside* the cond (a
                 # conditional that returns them would copy the whole
                 # buffer every iteration); on a hit the same block is
-                # harmlessly rewritten in place
-                static = lax.cond(
+                # harmlessly rewritten in place.  A clean cached tile is
+                # bitwise the fresh candidate mask: apply_move repairs
+                # the endpoints' destination columns in place.
+                cand = lax.cond(
                     hit,
                     lambda: lax.dynamic_slice(
                         c_ok, (sb * kb, c * rb, zero), (kb, rb, n_dev)),
-                    lambda: eval_static(sb, c))
+                    lambda: eval_cand(sb, c))
                 c_ok = lax.dynamic_update_slice(
-                    c_ok, static, (sb * kb, c * rb, zero))
+                    c_ok, cand, (sb * kb, c * rb, zero))
                 # a tag change invalidates the slot's other blocks (a
                 # no-op when the tags already matched)
                 keep = tags == src_b
@@ -285,18 +329,30 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
                                                    (sb * kb, zero))
                 c_dev = lax.dynamic_update_slice(c_dev, src_b, (sb * kb,))
             else:
-                static = eval_static(sb, c)
-            valid = static & eval_dyn(sb, c)
-            anyv, dst = _select_rows(valid.reshape(kb * rb, n_dev), util,
-                                     backend)
+                cand = eval_cand(sb, c)
+            any_rows = jnp.any(cand, axis=(1, 2))            # (kb,)
+            # the variance test + masked-select reduction only run when
+            # the tile holds a candidate at all; the convergence-tail
+            # walk is dominated by tiles that do not.  A dead tile's
+            # select would return (all-False, all-0) — exactly the
+            # short-circuit value, so the sequence is unchanged.
+            anyv, dst = lax.cond(
+                jnp.any(any_rows),
+                lambda t: _select_rows(
+                    (t & eval_var(sb, c)).reshape(kb * rb, n_dev),
+                    util, backend),
+                lambda t: (jnp.zeros((kb * rb,), bool),
+                           jnp.zeros((kb * rb,), jnp.int32)),
+                cand)
             anyv = anyv.reshape(kb, rb)
             dst = dst.reshape(kb, rb)
             first_i = jnp.argmax(anyv, axis=1)
             has = jnp.take_along_axis(anyv, first_i[:, None], 1)[:, 0]
             tile_dst = jnp.take_along_axis(dst, first_i[:, None], 1)[:, 0]
             idxb = jnp.arange(kb, dtype=jnp.int32)
-            has &= sb * kb + idxb < k       # pad sources alias device 0;
-            newly = has & (found_row < 0)   # they may never win
+            in_avail = sb * kb + idxb < n_avail
+            has &= in_avail                 # pad / parked sources alias
+            newly = has & (found_row < 0)   # real devices; may never win
             found_row = jnp.where(newly, (c * rb + first_i).astype(jnp.int32),
                                   found_row)
             found_dst = jnp.where(newly, tile_dst.astype(jnp.int32),
@@ -315,31 +371,55 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             win_j = jnp.where(decided, sb * kb + jb, win_j)
             win_row = jnp.where(decided, found_row[jb], win_row)
             win_dst = jnp.where(decided, found_dst[jb], win_dst)
+            if bounds:
+                # certificate: a fully-walked fruitless source whose scan
+                # saw no candidate pair anywhere — the one verdict the
+                # variance criterion alone can never change.  ``marg``
+                # accumulates any-candidate per block slot; sources still
+                # mid-walk (unres) or winning are never pruned.
+                marg = marg | any_rows
+                scanned = (decided | exhausted) & ~found & ~unres
+                prunable = scanned & ~marg & in_avail
+                tgt = jnp.where(prunable, src_b, n_dev)  # OOB writes drop
+                pruned = pruned.at[tgt].set(True, mode="drop")
             next_sb = jnp.where(exhausted, sb + 1, sb)
             next_c = jnp.where(exhausted, 0, c + 1)
-            done = decided | (exhausted & (sb + 1 >= n_sb))
+            done = decided | (exhausted & ((sb + 1) * kb >= n_avail))
             reset = jnp.full((kb,), -1, jnp.int32)
             found_row = jnp.where(exhausted, reset, found_row)
             found_dst = jnp.where(exhausted, 0, found_dst)
+            marg = jnp.where(exhausted, False, marg)
             return (next_sb, next_c, found_row, found_dst,
-                    win_j, win_row, win_dst, done, c_dev, c_ok, c_clean)
+                    win_j, win_row, win_dst, done, c_dev, c_ok, c_clean,
+                    marg, pruned)
 
         def cond(carry):
             return active & ~carry[7]
 
         init = (jnp.int32(0), jnp.int32(0), jnp.full((kb,), -1, jnp.int32),
                 jnp.zeros((kb,), jnp.int32), jnp.int32(-1), jnp.int32(-1),
-                jnp.int32(0), jnp.bool_(False), c_dev, c_ok, c_clean)
+                jnp.int32(0), jnp.bool_(False), c_dev, c_ok, c_clean,
+                jnp.zeros((kb,), bool), pruned)
         out = lax.while_loop(cond, body, init)
         win_j, win_row, win_dst = out[4], out[5], out[6]
-        dyn = dyn[:10] + (out[8], out[9], out[10])
+        dyn = dyn[:10] + (out[8], out[9], out[10], out[12])
         found = win_j >= 0
         jw = jnp.clip(win_j, 0, k_pad - 1)
+        win_dev = src_order[jw]
+        if bounds:
+            # faithful rank of the winner in the *full* fullest-first
+            # order: the sources_tried histogram stays identical with and
+            # without the bounds, and the surplus (rank − compacted
+            # position) counts the scans live certificates skipped.
+            rank = jnp.argmax(order_k == win_dev).astype(jnp.int32)
+        else:
+            rank = win_j
         return (found,
                 rows_k[jw, jnp.clip(win_row, 0, r_cap - 1)],
-                src_order[jw],
+                win_dev,
                 win_dst,
-                win_j + 1,
+                rank + 1,
+                rank - jw,
                 dyn)
 
     def reorder(order, util, src, dst):
@@ -367,7 +447,7 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
         update a no-op *without branching*, so XLA keeps the scan carry
         buffers in place; no update touches more than O(n) elements."""
         used, util, us, usq, acting, pool_counts, dst_ok, \
-            rows_on, nrows, order, c_dev, c_ok, c_clean = dyn
+            rows_on, nrows, order, c_dev, c_ok, c_clean, pruned = dyn
         okf = ok.astype(jnp.float64)
         oki = ok.astype(jnp.int32)
         row = jnp.where(ok, row, 0)
@@ -376,6 +456,14 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
         pool = sh_pool[row]
         slot = sh_slot[row]
         both = jnp.stack([src, dst])
+        if bounds:
+            # pre-update snapshots for the source-side certificate
+            # triggers (legality.bound_*): only the move's source can
+            # enable a blocked pair — the destination only gains bytes,
+            # shards and membership, all disabling.
+            util_src_before = util[src]
+            used_src_before = used[src]
+            dok_src_before = dst_ok[pool, src]
         acting = acting.at[pgi, slot].set(jnp.where(ok, dst,
                                                     acting[pgi, slot]))
         pool_counts = pool_counts.at[pool, both].add(
@@ -410,8 +498,30 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             usq = usq + (u_new ** 2 - util[i] ** 2)   # identical, deltas
             util = util.at[i].set(u_new)      # are exactly 0.0
         order = jnp.where(ok, reorder(order, util, src, dst), order)
+        if bounds:
+            # surgical certificate invalidation — the same legality-core
+            # trigger set SourceBounds.invalidate applies host-side:
+            # touch (endpoints), holder (post-move acting set of the
+            # moved PG plus the old source), emptiest-order crossing,
+            # count flip, capacity binding.
+            acting_pg = acting[pgi]                          # (n_slots,)
+            holder = jnp.any(acting_pg[None, :] == dev_iota[:, None],
+                             axis=1)
+            touch = (dev_iota == src) | (dev_iota == dst) | holder
+            crossed = legality.bound_crossed(util_src_before, util[src],
+                                             util, src, dev_iota)
+            flip = legality.count_flip_enables(dok_src_before,
+                                               dst_ok[pool, src])
+            holds_pool = pool_counts[pool] > 0.0
+            largest = rows_on[:, 0]
+            maxsz = jnp.where(largest >= 0,
+                              sh_size[jnp.clip(largest, 0)], 0.0)
+            bind = legality.bound_capacity_binding(used_src_before,
+                                                   cap_lim[src], maxsz)
+            inval = touch | crossed | (flip & holds_pool) | bind
+            pruned = jnp.where(ok, pruned & ~inval, pruned)
         if cached:
-            # cache repair: the move only perturbs the two touched
+            # cache repair, part 1: the move perturbs the two touched
             # devices' tiles and the row-blocks holding a shard of the
             # moved PG (its acting set changed) — invalidate exactly
             # those; everything else stays warm across moves
@@ -421,21 +531,63 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             has_pg_b = has_pg.reshape(k_pad, n_blocks, rb).any(axis=2)
             dirty = touched[:, None] | has_pg_b            # (k_pad, blocks)
             c_clean = jnp.where(ok, c_clean & ~dirty, c_clean)
+            # cache repair, part 2 — exact column repair: of a cached
+            # candidate tile's dynamic inputs, only those at the two
+            # endpoints changed (used/util/dst_ok at src/dst), so
+            # recomputing the endpoints' destination columns for every
+            # cache slot keeps clean tiles bitwise the fresh evaluation
+            tags_c = jnp.clip(c_dev, 0)                    # (k_pad,)
+            rc = jnp.clip(rows_c, 0)
+            lvlc = sh_level[rc]
+            slotc = sh_slot[rc]
+            sbasec = sh_sbase[rc]
+            scntc = sh_scnt[rc]
+            sizec = jnp.where(rows_c >= 0, sh_size[rc], 0.0)
+            poolc = sh_pool[rc]
+            dom_d = dev_domain[lvlc[:, :, None], both[None, None, :]]
+            acting_c = acting[sh_pg[rc]]                   # (k_pad, r_cap, S)
+            badc = jnp.zeros(dom_d.shape, bool)
+            for j in range(n_slots):
+                a_j = acting_c[..., j]
+                in_step = (j >= sbasec) & (j < sbasec + scntc) & (j != slotc)
+                peer = dev_domain[lvlc, jnp.clip(a_j, 0)]
+                badc |= a_j[..., None] == both[None, None, :]
+                badc |= in_step[..., None] & (dom_d == peer[..., None])
+            staticc = legality.class_ok(
+                sh_class[rc][..., None],
+                dev_class[both][None, None, :]) & ~badc
+            cap_okc = legality.capacity_ok(used[both][None, None, :],
+                                           cap_lim[both][None, None, :],
+                                           sizec[..., None])
+            critc = dst_ok[poolc[:, :, None], both[None, None, :]]
+            cnt_sc = pool_counts[poolc, tags_c[:, None]]
+            idl_sc = ideal[poolc, tags_c[:, None]]
+            src_okc = legality.src_count_ok(cnt_sc, idl_sc, slack)
+            u_sc = util[tags_c][:, None, None]
+            not_selfc = both[None, None, :] != tags_c[:, None, None]
+            beforec = legality.before_source(
+                util[both][None, None, :], u_sc, both[None, None, :],
+                tags_c[:, None, None])
+            colsc = (staticc & cap_okc & critc
+                     & ((sizec > 0.0) & src_okc)[..., None]
+                     & not_selfc & dev_in[both][None, None, :] & beforec)
+            c_ok = c_ok.at[:, :, both].set(
+                jnp.where(ok, colsc, c_ok[:, :, both]))
         return (used, util, us, usq, acting, pool_counts, dst_ok,
-                rows_on, nrows, order, c_dev, c_ok, c_clean)
+                rows_on, nrows, order, c_dev, c_ok, c_clean, pruned)
 
     def step(carry, _):
         dyn, done, overflow = carry
         active = ~(done | overflow)
-        found, row, src, dst, tried, dyn = select_one(dyn, active)
+        found, row, src, dst, tried, skipped, dyn = select_one(dyn, active)
         # a full destination row-list would drop a shard: stop the chunk
         # and let the host re-pad (never hit when row_capacity >= max
         # rows/device + chunk, the packing invariant)
         ovf = found & (dyn[8][dst] >= r_cap)
         ok = active & found & ~ovf
         dyn = apply_move(dyn, ok, row, src, dst)
-        emit = jnp.where(ok, jnp.stack([row, src, dst, tried]),
-                         jnp.full((4,), -1, jnp.int32))
+        emit = jnp.where(ok, jnp.stack([row, src, dst, tried, skipped]),
+                         jnp.full((5,), -1, jnp.int32))
         done = done | (active & ~found)
         overflow = overflow | ovf
         return (dyn, done, overflow), emit
@@ -512,12 +664,14 @@ class BatchPlanner:
                  source_block: int = 1, row_block: int = 8,
                  row_capacity: int | None = None,
                  select_backend: str = "auto",
-                 legality_cache: bool = True):
+                 legality_cache: bool = False,
+                 source_bounds: bool = True):
         self.state = state
         self.cfg = cfg or EquilibriumConfig()
         self.chunk = chunk
         self.row_capacity = row_capacity
         self.legality_cache = legality_cache
+        self.source_bounds = source_bounds
         if select_backend == "auto":
             select_backend = ("pallas-tpu" if jax.default_backend() == "tpu"
                               else "ref")
@@ -531,8 +685,9 @@ class BatchPlanner:
         self._done = False
         self._terminal_seconds = 0.0    # wall time of empty final chunks
         # moves the device already planned+applied in the carry but the
-        # host has not yet emitted: (row, src, dst, tried, seconds)
-        self._stash: list[tuple[int, int, int, int, float]] = []
+        # host has not yet emitted: (row, src, dst, tried, skipped,
+        # seconds)
+        self._stash: list[tuple[int, int, int, int, int, float]] = []
         # deltas observed since the last sync, keyed by epoch; _invalid is
         # set when the stream is unusable (overflow, unstamped delta)
         self._pending: dict[int, ClusterDelta] = {}
@@ -630,7 +785,8 @@ class BatchPlanner:
             jnp.asarray(_pack_rows(dense.rows_on_dev, dense.sh_size,
                                    self._r_cap)),
             jnp.asarray(nrows_np), jnp.asarray(order_np),
-        ) + self._fresh_cache(dense.n_dev)
+        ) + self._fresh_cache(dense.n_dev) \
+            + (jnp.zeros(dense.n_dev, bool),)       # pruned: no bounds yet
         self._slack = jnp.asarray(cfg.count_slack, jnp.float64)
         self._headroom = jnp.asarray(cfg.headroom, jnp.float64)
         self._min_dvar = jnp.asarray(cfg.min_variance_delta, jnp.float64)
@@ -820,6 +976,21 @@ class BatchPlanner:
         # out runs keep the device-side tables (the hot per-tick path)
         structural = (bool(created) or bool(self._stash)
                       or any(isinstance(d, MovementDelta) for d in run))
+        # PR 6: source-bound certificates survive absorption only across
+        # a pure foreign-movement run planned with no discarded stash —
+        # discarding stashed moves un-applies them from the carry, which
+        # would leave certificates claiming facts about a state that
+        # never existed.  Every other delta type perturbs certificate
+        # inputs wholesale (sizes, ideals, the device axis), so the
+        # certificates restart cold there.
+        keep_bounds = (self.source_bounds and not self._stash
+                       and bool(run)
+                       and all(isinstance(d, MovementDelta) for d in run))
+        if keep_bounds:
+            used_old, util_old, dst_ok_old, pruned_old = (
+                np.asarray(a) for a in _fetch(
+                    (self._dyn[0], self._dyn[1], self._dyn[6],
+                     self._dyn[13])))
         self._stash = []
 
         # structural extensions first (append-only, per _absorbable)
@@ -923,6 +1094,41 @@ class BatchPlanner:
                             if grew else self._const[4]),) \
                 + self._const[5:12]
 
+        # surviving source-bound certificates: clear the endpoints and
+        # every current holder of each moved PG, then run the same
+        # legality-core triggers apply_move uses as a net carry-old vs
+        # state-new sweep — the criteria are memoryless, so the net
+        # compare per device is exact for the remaining (untouched)
+        # certificate holders
+        pruned_np = np.zeros(n_dev, bool)
+        if keep_bounds and pruned_old.any():
+            pruned_np = pruned_old.copy()
+            for d in run:
+                mv = d.movement
+                s_i, d_i = state.idx(mv.src_osd), state.idx(mv.dst_osd)
+                pruned_np[s_i] = pruned_np[d_i] = False
+                for o in state.acting[mv.pg]:
+                    pruned_np[state.idx(o)] = False
+            if pruned_np.any():
+                iota = np.arange(n_dev)
+                crossed = legality.bound_crossed(
+                    util_old[:, None], util[:, None], util[None, :],
+                    iota[:, None], iota[None, :])
+                kill = crossed.any(axis=0)
+                flips = dst_ok & ~dst_ok_old
+                kill |= (flips.any(axis=1)[:, None]
+                         & (pool_counts > 0.0)).any(axis=0)
+                largest = rows_np[:, 0]
+                maxsz = np.where(largest >= 0,
+                                 sh_size[np.clip(largest, 0)], 0.0)
+                lim = legality.capacity_limit(cap, cfg.headroom)
+                dropped = used < used_old
+                kill |= (dropped[:, None]
+                         & legality.bound_capacity_binding(
+                             used_old[:, None], lim[:, None],
+                             maxsz[None, :])).any(axis=0)
+                pruned_np &= ~kill
+
         dense.used = used
         dense.util = util
         dense.sh_size = sh_size          # Movement sizes read from here
@@ -938,7 +1144,7 @@ class BatchPlanner:
             jnp.asarray(dst_ok), jnp.asarray(rows_np),
             jnp.asarray(nrows_np),
             jnp.asarray(legality.fullest_first(util).astype(np.int32)),
-        ) + self._fresh_cache(n_dev)
+        ) + self._fresh_cache(n_dev) + (jnp.asarray(pruned_np),)
         self._done = False
         self._absorbed_deltas += len(run)
         self._epoch = state.mutation_epoch
@@ -947,13 +1153,14 @@ class BatchPlanner:
 
     # -- planning ------------------------------------------------------------
 
-    def _chunk_loop(self, budget: int) -> list[tuple[int, int, int, int, float]]:
+    def _chunk_loop(self, budget: int
+                    ) -> list[tuple[int, int, int, int, int, float]]:
         """Run chunks until ``budget`` raw moves are on hand (stashing any
         overshoot), the device reports convergence, or a re-pad is needed.
         ``self._terminal_seconds`` collects the wall time of chunks that
         emit no moves (the terminal every-source-fruitless scan)."""
         self._terminal_seconds = 0.0
-        raw: list[tuple[int, int, int, int, float]] = []
+        raw: list[tuple[int, int, int, int, int, float]] = []
         take = min(len(self._stash), budget)
         raw.extend(self._stash[:take])
         del self._stash[:take]
@@ -964,7 +1171,7 @@ class BatchPlanner:
                 self._dyn, self._const, self._slack, self._headroom,
                 self._min_dvar, k=self._k, kb=self._kb, rb=self._rb,
                 m=self.chunk, backend=self.select_backend,
-                cached=self.legality_cache)
+                cached=self.legality_cache, bounds=self.source_bounds)
             moves_np, done, overflow, nrows_np = _fetch(
                 (moves, done, overflow, self._dyn[8]))
             dt = time.perf_counter() - t0
@@ -991,7 +1198,9 @@ class BatchPlanner:
                 # re-pad the per-device row table and resume (one extra
                 # sync; triggers one recompile for the new row_capacity);
                 # the legality cache is shape-bound to r_cap, so it
-                # restarts cold
+                # restarts cold — the source bounds are not (their
+                # certificates say nothing about row geometry) and
+                # survive the re-pad
                 rows_np = _fetch(self._dyn[7])
                 self._r_cap = self._round_cap(int(nrows_np.max()) + self.chunk)
                 packed = np.full((state.n_devices, self._r_cap), -1, np.int32)
@@ -999,7 +1208,8 @@ class BatchPlanner:
                     nd = int(nrows_np[d])
                     packed[d, :nd] = rows_np[d, :nd]
                 self._dyn = self._dyn[:7] + (jnp.asarray(packed),) \
-                    + self._dyn[8:10] + self._fresh_cache(state.n_devices)
+                    + self._dyn[8:10] + self._fresh_cache(state.n_devices) \
+                    + (self._dyn[13],)
         return raw
 
     def plan(self, max_moves: int | None = None,
@@ -1027,29 +1237,31 @@ class BatchPlanner:
                 self._build()
             if self._dyn is None or budget <= 0:
                 if stats_out is not None:
-                    from .equilibrium import _tail_flush, _tail_stats
-                    _tail_flush(_tail_stats(stats_out))
+                    tail_flush(tail_stats(stats_out))
                     stats_out["legality_cache"] = self.legality_cache
+                    stats_out["source_bounds"] = self.source_bounds
                 return [], []
             raw_moves = self._chunk_loop(budget)
             if stats_out is not None:
-                # same schema as the host-loop engines (_tail_flush);
+                # same schema as the host-loop engines (tail_flush);
                 # selection and apply are fused on-device, so the whole
                 # chunk-amortized move time is attributed to selection
-                from .equilibrium import (_tail_flush, _tail_record,
-                                          _tail_stats, _tail_terminal)
-                acc = _tail_stats(stats_out)
-                for _row, _src, _dst, tried, secs in raw_moves:
-                    _tail_record(acc, tried, secs, 0.0)
-                _tail_terminal(acc, self._terminal_seconds)
-                _tail_flush(acc)
+                acc = tail_stats(stats_out)
+                for _row, _src, _dst, tried, skipped, secs in raw_moves:
+                    tail_record(acc, tried, secs, 0.0)
+                    acc["bound_hits"] += int(skipped)
+                tail_terminal(acc, self._terminal_seconds)
+                if self.source_bounds and self._dyn is not None:
+                    acc["pruned"] = int(_fetch(jnp.sum(self._dyn[13])))
+                tail_flush(acc)
                 stats_out["legality_cache"] = self.legality_cache
+                stats_out["source_bounds"] = self.source_bounds
 
             # -- reconcile with the dict-based model, replaying the move log
             dense = self._dense
             movements: list[Movement] = []
             records: list[MoveRecord] = []
-            for row, src, dst, tried, secs in raw_moves:
+            for row, src, dst, tried, _skipped, secs in raw_moves:
                 pg, slot = dense.shard_key[row]
                 mv = Movement(pg, slot, state.devices[src].id,
                               state.devices[dst].id,
@@ -1081,7 +1293,8 @@ def _balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
                    source_block: int = 1, row_block: int = 8,
                    row_capacity: int | None = None,
                    select_backend: str = "auto",
-                   legality_cache: bool = True,
+                   legality_cache: bool = False,
+                   source_bounds: bool = True,
                    stats_out: dict | None = None):
     """Device-resident drop-in for the faithful §3.1 planner:
     identical move sequences, one host sync per ``chunk`` moves.
@@ -1096,7 +1309,15 @@ def _balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
     per-device row table (default: max shards/device + ``chunk``, the
     no-overflow invariant).  ``select_backend``: "auto" (Pallas on TPU,
     jnp reference elsewhere), "ref", "pallas" (interpret off-TPU), or
-    "pallas-tpu".
+    "pallas-tpu".  ``legality_cache`` opts into the cross-move
+    candidate-mask cache (full tile masks kept in the carry, two columns
+    repaired per move): off by default because at the CPU tile sizes the
+    per-move repair costs more than the fresh candidate evaluation it
+    saves — it exists for accelerator geometries, and stays
+    property-tested bit-identical either way.  ``source_bounds`` (on by
+    default) keeps per-source no-candidate certificates plus the pruned
+    stable partition of the source walk; both opt-outs are benchmarked
+    in benchmarks/bench_planner.py tail rows.
 
     Trajectory records amortize each chunk's wall-time over its emitted
     moves, so the first chunk's ``planning_seconds`` include the one-time
@@ -1116,7 +1337,8 @@ def _balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
     planner = BatchPlanner(state, cfg, chunk=chunk, source_block=source_block,
                            row_block=row_block, row_capacity=row_capacity,
                            select_backend=select_backend,
-                           legality_cache=legality_cache)
+                           legality_cache=legality_cache,
+                           source_bounds=source_bounds)
     return planner.plan(record_trajectory=record_trajectory,
                         record_free_space=record_free_space,
                         stats_out=stats_out)
@@ -1128,7 +1350,8 @@ def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
                   source_block: int = 1, row_block: int = 8,
                   row_capacity: int | None = None,
                   select_backend: str = "auto",
-                  legality_cache: bool = True):
+                  legality_cache: bool = False,
+                  source_bounds: bool = True):
     """Deprecated: use ``create_planner("equilibrium_batch")`` from
     :mod:`repro.core.planner`, or hold a :class:`BatchPlanner` directly
     for warm-started incremental planning."""
@@ -1140,4 +1363,5 @@ def balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,
                           source_block=source_block, row_block=row_block,
                           row_capacity=row_capacity,
                           select_backend=select_backend,
-                          legality_cache=legality_cache)
+                          legality_cache=legality_cache,
+                          source_bounds=source_bounds)

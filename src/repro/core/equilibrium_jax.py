@@ -248,9 +248,12 @@ class DenseState:
         peer = occ - (dom_rows == own[:, None]).astype(np.int16)
         return peer, occ
 
-    def valid_matrix(self, rows: np.ndarray, src_idx: int,
-                     cfg: EquilibriumConfig) -> np.ndarray:
-        """(len(rows), n_dev) boolean matrix of acceptable moves."""
+    def candidate_matrix(self, rows: np.ndarray, src_idx: int,
+                         cfg: EquilibriumConfig) -> np.ndarray:
+        """(len(rows), n_dev) pairs passing every criterion *except* the
+        variance test — the PR-6 prune predicate's mask: a source whose
+        candidate matrix is all-false holds a no-candidate certificate
+        (the variance criterion alone can never create a legal move)."""
         n = self.n_dev
         sizes = self.sh_size[rows][:, None]                   # (R,1)
 
@@ -280,24 +283,37 @@ class DenseState:
         src_ok = legality.src_count_ok(src_cnt, src_ideal, cfg.count_slack)
         dst_ok = legality.dst_count_ok(cnt, ideal, cfg.count_slack)
 
-        # exact variance delta < 0 (strict improvement)
-        u = self.util
-        var_ok = legality.variance_improves(
-            self.used[src_idx], self.used[None, :], self.cap[src_idx],
-            self.cap[None, :], u[src_idx], u[None, :], sizes,
-            self.util_sum, self.util_sumsq, float(n),
-            cfg.min_variance_delta)
-
         # the faithful loop scans destinations emptiest-first and stops at
         # the source's own rank (see legality.before_source)
+        u = self.util
         before_src = legality.before_source(u, u[src_idx], np.arange(n),
                                             src_idx)
 
-        valid = (cls_ok & not_member & dom_ok & cap_ok & dst_ok & var_ok
-                 & src_ok[:, None] & self.dev_in[None, :]
-                 & before_src[None, :])
-        valid[:, src_idx] = False
-        return valid
+        cand = (cls_ok & not_member & dom_ok & cap_ok & dst_ok
+                & src_ok[:, None] & self.dev_in[None, :]
+                & before_src[None, :])
+        cand[:, src_idx] = False
+        return cand
+
+    def variance_mask(self, rows: np.ndarray, src_idx: int,
+                      cfg: EquilibriumConfig) -> np.ndarray:
+        """(len(rows), n_dev) exact variance delta < -min_variance_delta
+        (strict improvement)."""
+        sizes = self.sh_size[rows][:, None]                   # (R,1)
+        u = self.util
+        return legality.variance_improves(
+            self.used[src_idx], self.used[None, :], self.cap[src_idx],
+            self.cap[None, :], u[src_idx], u[None, :], sizes,
+            self.util_sum, self.util_sumsq, float(self.n_dev),
+            cfg.min_variance_delta)
+
+    def valid_matrix(self, rows: np.ndarray, src_idx: int,
+                     cfg: EquilibriumConfig) -> np.ndarray:
+        """(len(rows), n_dev) boolean matrix of acceptable moves
+        (candidate ∧ variance — boolean AND, so splitting the masks for
+        the bounds path cannot change a bit)."""
+        return (self.candidate_matrix(rows, src_idx, cfg)
+                & self.variance_mask(rows, src_idx, cfg))
 
     def pick(self, rows: np.ndarray, valid: np.ndarray) -> tuple[int, int] | None:
         """First row (largest shard) with a valid destination; destination =
@@ -364,7 +380,8 @@ if _HAVE_JAX:
 def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                   record_trajectory: bool = False, use_jax: bool = False,
                   pad_rows: int = 256, record_free_space: bool = True,
-                  engine: str | None = None, stats_out: dict | None = None):
+                  engine: str | None = None, stats_out: dict | None = None,
+                  source_bounds: bool = False):
     """Drop-in replacement for :func:`repro.core.equilibrium.balance` with
     identical outputs (move-for-move) and 1–3 orders of magnitude less
     planning time on paper-scale clusters.  Library-internal engine entry;
@@ -395,30 +412,51 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
             return _balance_batch(state, cfg,
                                   record_trajectory=record_trajectory,
                                   record_free_space=record_free_space,
-                                  stats_out=stats_out)
+                                  stats_out=stats_out,
+                                  source_bounds=source_bounds)
         engine = "numpy"                        # pragma: no cover
     use_legacy_jax = engine == "jax-legacy" and _HAVE_JAX
+    if source_bounds and use_legacy_jax:
+        raise ValueError("source_bounds is not supported by the jax-legacy "
+                         "engine: its kernel does not expose the candidate "
+                         "mask the prune predicate needs")
 
-    from .equilibrium import (_tail_flush, _tail_record, _tail_stats,
-                              _tail_terminal)
+    from .tail import (SourceBounds, tail_flush, tail_record, tail_stats,
+                       tail_terminal)
     dense = DenseState(state)
+    bounds = SourceBounds() if source_bounds else None
     movements: list[Movement] = []
     records: list[MoveRecord] = []
-    acc = _tail_stats(stats_out)
+    acc = tail_stats(stats_out)
 
     while len(movements) < cfg.max_moves:
         t0 = time.perf_counter()
         src_order = legality.fullest_first(dense.util)[: cfg.k]
         picked = None
         tried = 0
+        if bounds is not None:
+            bounds.begin_scan()
         for src_idx in src_order:
             tried += 1
             src_idx = int(src_idx)
+            if bounds is not None and bounds.skip(src_idx):
+                continue
             rows = dense.source_rows(src_idx)
             if rows.size == 0:
+                if bounds is not None:
+                    bounds.prune(src_idx, 0.0)   # no pairs at all
                 continue
             if use_legacy_jax:
                 picked = _pick_jax(dense, rows, src_idx, cfg, pad_rows)
+            elif bounds is not None:
+                cand = dense.candidate_matrix(rows, src_idx, cfg)
+                if not cand.any():
+                    # no candidate pair: certificate (rows[0] = largest)
+                    bounds.prune(src_idx, float(dense.sh_size[rows[0]]))
+                    continue
+                picked = dense.pick(rows,
+                                    cand & dense.variance_mask(rows, src_idx,
+                                                               cfg))
             else:
                 valid = dense.valid_matrix(rows, src_idx, cfg)
                 picked = dense.pick(rows, valid)
@@ -426,13 +464,35 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 break
         dt = time.perf_counter() - t0
         if picked is None:
-            _tail_terminal(acc, dt)
+            if bounds is not None:
+                bounds.end_terminal_scan()
+            tail_terminal(acc, dt)
             break
         row, dst_idx = picked
         t1 = time.perf_counter()
+        if bounds is not None:
+            pool_i = int(dense.sh_pool[row])
+            s_pre = int(dense.sh_dev[row])
+            pgi = int(dense.sh_pg[row])
+            c_old = float(dense.pool_counts[pool_i, s_pre])
+            i_src = float(dense.ideal[pool_i, s_pre])
+            flip = bool(legality.count_flip_enables(
+                legality.dst_count_ok(c_old, i_src, cfg.count_slack),
+                legality.dst_count_ok(c_old - 1.0, i_src, cfg.count_slack)))
+            util_before = float(dense.util[s_pre])
+            used_before = float(dense.used[s_pre])
         mv = dense.apply_row(row, dst_idx)
         state.apply(mv)
-        _tail_record(acc, tried, dt, time.perf_counter() - t1)
+        if bounds is not None:
+            holders = np.flatnonzero(dense.member[pgi]).tolist() + [s_pre]
+            counts = dense.pool_counts[pool_i]
+            bounds.invalidate(
+                s_pre, dst_idx, holders, util_before,
+                float(dense.util[s_pre]), dense.util, used_before,
+                float(legality.capacity_limit(dense.cap[s_pre],
+                                              cfg.headroom)),
+                flip, lambda s: counts[s] > 0)
+        tail_record(acc, tried, dt, time.perf_counter() - t1)
         movements.append(mv)
         if record_trajectory:
             records.append(MoveRecord(
@@ -443,7 +503,12 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                 planning_seconds=dt,
                 sources_tried=tried,
             ))
-    _tail_flush(acc)
+    if bounds is not None:
+        acc["bound_hits"] = bounds.bound_hits
+        acc["pruned"] = bounds.pruned_count
+    if stats_out is not None:
+        stats_out["source_bounds"] = bool(source_bounds)
+    tail_flush(acc)
     return movements, records
 
 

@@ -198,3 +198,59 @@ def fullest_first(util) -> np.ndarray:
     """Stable fullest-first device order — the §3.1 source scan order and
     the batch carry's maintained ``order`` invariant."""
     return np.argsort(-util, kind="stable")
+
+
+# ---------------------------------------------------------------------------
+# Source-bound certificates (PR 6)
+#
+# When a source's scan finds *no pair passing every criterion except the
+# variance test*, that emptiness is a certificate: the variance test alone
+# cannot create a legal move (valid = candidate ∧ variance), and every
+# other criterion only flips in the source's favour under a small set of
+# surgical events.  The expressions below name those events; every engine
+# (the faithful loop, the dense-NumPy engine, the batch carry's
+# ``apply_move``) invalidates certificates through these same functions,
+# so the bounds are a performance knob and never a semantics knob — the
+# same by-construction bit-identity argument as the rest of this module.
+
+
+def bound_crossed(util_dropped_before, util_dropped_after, util,
+                  dropped_index, dev_index):
+    """A device whose utilization just dropped crossed a pruned source's
+    emptiest-first threshold: it was at/after the source in the stable
+    (util asc, index asc) destination order before the drop and strictly
+    before it now — i.e. the source gained a destination candidate it has
+    never evaluated, so its no-candidate certificate no longer holds.
+    Devices already before the source stay before it when they drop
+    (``before_source`` is monotone in the destination's utilization), so
+    only the *crossing* invalidates."""
+    return (before_source(util_dropped_after, util, dropped_index, dev_index)
+            & ~before_source(util_dropped_before, util, dropped_index,
+                             dev_index))
+
+
+def bound_capacity_binding(used_dropped_before, cap_limit_dropped,
+                           largest_shard):
+    """Capacity may have been the blocking criterion: before the device
+    dropped bytes, the source's largest shard did not fit on it.  Losing
+    bytes is the only event that flips :func:`capacity_ok` toward legal,
+    and the largest shard binds first (capacity fit is monotone in shard
+    size), so a certificate only dies when the fit was failing *before*
+    the drop.
+
+    Written as the direct comparison rather than ``~capacity_ok(...)``:
+    the host engines call this with Python float scalars, where
+    ``capacity_ok`` returns a ``bool`` and unary ``~`` is *integer*
+    bitwise-not (``~True == -2``, truthy) — the comparison negates
+    exactly for scalars and arrays alike."""
+    return used_dropped_before + largest_shard > cap_limit_dropped
+
+
+def count_flip_enables(dst_ok_before, dst_ok_after):
+    """The destination ideal-count criterion flipped failing→passing.
+    ``dst_count_ok`` is a threshold in the pool count (gaining a shard
+    can only disable, losing one can only enable), so this fires exactly
+    when a device sheds a shard of a pool it was count-blocked for —
+    the one count event that can break a no-candidate certificate for
+    sources still holding shards of that pool."""
+    return dst_ok_after & ~dst_ok_before

@@ -215,8 +215,10 @@ class FaithfulEquilibriumPlanner(_StatelessPlanner):
 
     name = "equilibrium_faithful"
 
-    def __init__(self, cfg: EquilibriumConfig | None = None):
+    def __init__(self, cfg: EquilibriumConfig | None = None,
+                 source_bounds: bool = False):
         self.cfg = cfg or EquilibriumConfig()
+        self.source_bounds = source_bounds
 
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
@@ -225,7 +227,8 @@ class FaithfulEquilibriumPlanner(_StatelessPlanner):
         moves, records = _balance(state, _with_budget(self.cfg, budget),
                                   record_trajectory=record_trajectory,
                                   record_free_space=record_free_space,
-                                  stats_out=aux)
+                                  stats_out=aux,
+                                  source_bounds=self.source_bounds)
         return PlanResult(moves, records, self.name, stats={
             "planning_seconds": time.perf_counter() - t0,
             "budget": budget, "engine": "faithful", **aux})
@@ -236,8 +239,10 @@ class _DensePlanner(_StatelessPlanner):
 
     engine = "numpy"
 
-    def __init__(self, cfg: EquilibriumConfig | None = None):
+    def __init__(self, cfg: EquilibriumConfig | None = None,
+                 source_bounds: bool = False):
         self.cfg = cfg or EquilibriumConfig()
+        self.source_bounds = source_bounds
 
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
@@ -248,7 +253,7 @@ class _DensePlanner(_StatelessPlanner):
             state, _with_budget(self.cfg, budget),
             record_trajectory=record_trajectory,
             record_free_space=record_free_space, engine=self.engine,
-            stats_out=aux)
+            stats_out=aux, source_bounds=self.source_bounds)
         return PlanResult(moves, records, self.name, stats={
             "planning_seconds": time.perf_counter() - t0,
             "budget": budget, "engine": self.engine, **aux})
@@ -293,14 +298,15 @@ class BatchEquilibriumPlanner:
                  source_block: int = 1, row_block: int = 8,
                  row_capacity: int | None = None,
                  select_backend: str = "auto", warm: bool = True,
-                 legality_cache: bool = True):
+                 legality_cache: bool = False, source_bounds: bool = True):
         self.cfg = cfg or EquilibriumConfig()
         self.warm = warm
         self._engine_kwargs = dict(chunk=chunk, source_block=source_block,
                                    row_block=row_block,
                                    row_capacity=row_capacity,
                                    select_backend=select_backend,
-                                   legality_cache=legality_cache)
+                                   legality_cache=legality_cache,
+                                   source_bounds=source_bounds)
         self._impl = None                # BatchPlanner, bound lazily
         self._fallback = None            # numpy planner when JAX is absent
 

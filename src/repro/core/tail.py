@@ -1,0 +1,173 @@
+"""Convergence-tail instrumentation and host-side source bounds (PR 6).
+
+The convergence tail is the phase where most accepted moves come from a
+source other than the fullest device (``sources_tried > 1``): every move
+re-walks the legality of sources that have already proven fruitless, and
+at cluster-B scale that re-walking is ~97% of full-convergence wall
+time.  This module owns the two pieces every engine shares:
+
+* the tail *accumulator* (:func:`tail_stats` / :func:`tail_record` /
+  :func:`tail_terminal` / :func:`tail_flush`) — the ``sources_tried``
+  histogram, the selection/apply wall split, and the PR-6 prune
+  counters, flushed into ``PlanResult.stats`` with one schema for all
+  engines (previously duplicated as local import blocks inside
+  ``equilibrium_batch.plan``);
+* the host-side :class:`SourceBounds` certificate tracker used by the
+  faithful and dense-NumPy engines behind their ``source_bounds`` flag —
+  the same prune predicate and the same surgical invalidation events
+  (through the shared :mod:`repro.core.legality` expressions) that the
+  batch engine maintains device-resident in its carry, so the property
+  suite can cross-check all three engines bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from . import legality
+
+
+# ---------------------------------------------------------------------------
+# Tail accumulator (PlanResult.stats schema)
+
+
+def tail_stats(stats_out: dict | None) -> dict:
+    """Mutable convergence-tail accumulator shared by all engines: a
+    ``sources_tried`` histogram, the selection/apply wall-time split and
+    the source-bound prune counters, written into ``stats_out``
+    (PlanResult.stats) by :func:`tail_flush`."""
+    return {"hist": {}, "select": 0.0, "apply": 0.0, "tail": 0.0,
+            "terminal": 0.0, "bound_hits": 0, "pruned": 0,
+            "out": stats_out}
+
+
+def tail_record(acc: dict, tried: int, select_s: float,
+                apply_s: float) -> None:
+    acc["hist"][tried] = acc["hist"].get(tried, 0) + 1
+    acc["select"] += select_s
+    acc["apply"] += apply_s
+    if tried > 1:
+        acc["tail"] += select_s + apply_s
+
+
+def tail_terminal(acc: dict, seconds: float) -> None:
+    """Account the final fruitless scan (every source walked, no legal
+    move) — by definition the most tail-like work in a convergence run,
+    so it belongs in the tail share."""
+    acc["select"] += seconds
+    acc["tail"] += seconds
+    acc["terminal"] += seconds
+
+
+def tail_flush(acc: dict) -> None:
+    if acc["out"] is None:
+        return
+    hist = acc["hist"]
+    acc["out"].update(
+        sources_tried_hist={str(t): hist[t] for t in sorted(hist)},
+        tail_moves=sum(c for t, c in hist.items() if t > 1),
+        tail_seconds=acc["tail"],
+        terminal_scan_seconds=acc["terminal"],
+        selection_seconds=acc["select"], apply_seconds=acc["apply"],
+        moves_seconds=acc["select"] + acc["apply"],
+        bound_hits=acc["bound_hits"],
+        pruned_sources=acc["pruned"])
+
+
+# ---------------------------------------------------------------------------
+# Host-side source-bound certificates
+
+
+class SourceBounds:
+    """Per-source no-candidate certificates for the host-loop engines.
+
+    A source is *pruned* when its scan produced no pair passing every
+    criterion except the variance test ("no candidate pair") — the one
+    state of affairs the variance criterion alone can never undo, which
+    makes the certificate immune to the global ``util_sum`` drift that
+    defeats any threshold on utilization itself.  A live certificate
+    lets the scan skip the source without touching its shards.
+
+    Certificates die only under the surgical events named in the
+    legality core (mirroring the batch carry's ``apply_move``):
+
+    * *touch* — the source was an endpoint of the applied move;
+    * *holder* — the moved PG has a shard on the source (membership /
+      failure-domain masks for those rows changed), including the old
+      source that just lost one;
+    * *crossing* — the move's source dropped past the pruned source in
+      the emptiest-first destination order (:func:`legality.bound_crossed`);
+    * *count flip* — the move's source shed a shard of a pool it was
+      count-blocked for (:func:`legality.count_flip_enables`) and the
+      pruned source still holds shards of that pool;
+    * *capacity* — the move's source lost bytes while the pruned
+      source's largest shard did not fit on it
+      (:func:`legality.bound_capacity_binding`).
+    """
+
+    def __init__(self):
+        self._pruned: dict[int, float] = {}   # src index -> largest shard
+        self.bound_hits = 0                   # scans skipped by a live bound
+        self._scan_hits = 0                   # ... within the current scan
+
+    # -- scan-side -----------------------------------------------------
+
+    def begin_scan(self) -> None:
+        self._scan_hits = 0
+
+    def skip(self, src_idx: int) -> bool:
+        if src_idx in self._pruned:
+            self.bound_hits += 1
+            self._scan_hits += 1
+            return True
+        return False
+
+    def end_terminal_scan(self) -> None:
+        """Drop the final fruitless scan's skips from ``bound_hits`` so
+        the counter means 'scans skipped while producing moves' in every
+        engine (the batch engine cannot see terminal-scan skips: its
+        terminal chunk emits nothing)."""
+        self.bound_hits -= self._scan_hits
+        self._scan_hits = 0
+
+    def prune(self, src_idx: int, largest_shard: float) -> None:
+        self._pruned[src_idx] = float(largest_shard)
+
+    @property
+    def pruned_count(self) -> int:
+        return len(self._pruned)
+
+    def __contains__(self, src_idx: int) -> bool:
+        return src_idx in self._pruned
+
+    # -- invalidation --------------------------------------------------
+
+    def invalidate(self, src_idx: int, dst_idx: int, holders,
+                   util_src_before: float, util_src_after: float,
+                   util, used_src_before: float, cap_limit_src: float,
+                   count_flip: bool, holds_pool) -> None:
+        """Kill every certificate the applied move could have broken.
+
+        ``util`` is the post-move utilization vector; ``holds_pool`` maps
+        a device index to whether it still holds shards of the moved
+        PG's pool.  Only the move's *source* side can enable a blocked
+        pair (the destination gains bytes, shards and membership — all
+        disabling), so the crossing/count/capacity triggers test the
+        source endpoint only.
+        """
+        if not self._pruned:
+            return
+        self._pruned.pop(src_idx, None)
+        self._pruned.pop(dst_idx, None)
+        for h in holders:
+            self._pruned.pop(int(h), None)
+        for s in list(self._pruned):
+            if bool(legality.bound_crossed(util_src_before, util_src_after,
+                                           util[s], src_idx, s)):
+                del self._pruned[s]
+            elif count_flip and holds_pool(s):
+                del self._pruned[s]
+            elif bool(legality.bound_capacity_binding(
+                    used_src_before, cap_limit_src, self._pruned[s])):
+                del self._pruned[s]
+
+    def clear(self) -> None:
+        self._pruned.clear()

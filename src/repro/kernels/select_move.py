@@ -81,3 +81,26 @@ def masked_select_fwd(valid: jax.Array, util: jax.Array, *,
         interpret=interpret,
     )(valid, util)
     return any_out[:M], dst_out[:M]
+
+
+def compact_sources(order_k: jax.Array,
+                    pruned: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Masked-select over the pruned source set: stable partition of the
+    top-k source ranks so unpruned sources come first (fullest-first
+    order preserved) and pruned sources are parked at the back.
+
+    order_k: (k,) device indices, fullest first.  pruned: (n_dev,) bool.
+    Returns (compacted (k,) order, int32 count of unpruned sources).
+    The scan then starts at the first plausible source and stops after
+    ``count`` ranks; parked entries keep their devices (so downstream
+    gathers stay in-bounds) but are masked out of winning/pruning by the
+    ``count`` guard.  k is a handful of lanes, so this is a jnp sort, not
+    a Pallas grid; the stable partition is encoded in the sort key
+    (parked ranks shifted past every unparked rank) to avoid relying on
+    argsort stability.
+    """
+    k = order_k.shape[0]
+    parked = pruned[order_k]
+    rank = jnp.arange(k, dtype=jnp.int32)
+    perm = jnp.argsort(jnp.where(parked, rank + k, rank))
+    return order_k[perm], jnp.sum(~parked).astype(jnp.int32)

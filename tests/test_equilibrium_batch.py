@@ -262,13 +262,16 @@ def test_warm_start_absorbs_growth_into_overshoot_stash():
     assert dense_rebuild_count() - before == 0
 
 
-def test_batch_legality_cache_off_identical():
-    """The cross-move legality cache is a performance knob, never a
-    semantics knob: cached and uncached walks emit the same sequence."""
+def test_batch_legality_cache_opt_in_identical():
+    """The cross-move legality cache (opt-in since PR 6) is a
+    performance knob, never a semantics knob: cached and default
+    fresh-evaluation walks both match the faithful sequence."""
     cfg = EquilibriumConfig()
     a, _ = equilibrium_balance(small_test_cluster(), cfg)
-    b, _ = balance_batch(small_test_cluster(), cfg, legality_cache=False)
+    b, _ = balance_batch(small_test_cluster(), cfg, legality_cache=True)
+    c, _ = balance_batch(small_test_cluster(), cfg)
     assert as_tuples(a) == as_tuples(b)
+    assert as_tuples(a) == as_tuples(c)
 
 
 def test_out_device_never_a_destination_even_with_count_slack():

@@ -1,0 +1,267 @@
+"""PR 6 tentpole coverage: monotone per-source legality bounds and the
+persistent source priority queue.
+
+* Soundness property (hypothesis): every scan the certificates skip is
+  justified — a pruned source has *no candidate pair* (no destination
+  passing every criterion except the variance test) under the faithful
+  engine's own scan of the live state, across arbitrary delta mixes.
+* Bit-identity matrix: ``source_bounds`` × ``legality_cache`` (the
+  PR-4 cache, opt-in since this PR) on the batch engine, and
+  ``source_bounds`` on/off on the faithful and dense-NumPy engines, all
+  against the faithful reference.
+* Absorption: certificates survive a pure foreign-movement delta run
+  (the only run type whose carry-old → state-new sweep is exact) and the
+  continued sequence still matches a cold plan.
+* Counter parity: ``bound_hits`` / ``pruned_sources`` /
+  ``sources_tried_hist`` agree across all three engines at
+  ``source_block=1`` (the faithful walk order).
+* :func:`repro.kernels.select_move.compact_sources` is a stable
+  partition of the top-k ranks.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (Device, EquilibriumConfig, Movement, TiB,
+                        create_planner, small_test_cluster)
+from repro.core.equilibrium import _balance, _count_criterion
+from repro.core.tail import SourceBounds
+
+
+def tup(moves):
+    return [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in moves]
+
+
+def _apply_op(state, op, rng):
+    kind = op % 4
+    if kind == 0:                              # out-flip a random device
+        dev = state.devices[rng.integers(state.n_devices)]
+        state.mark_out(dev.id, out=dev.id not in state.out_osds)
+    elif kind == 1:                            # foreign legal movement
+        _apply_foreign_movement(state)
+    elif kind == 2:                            # pool growth
+        state.grow_pool(int(rng.integers(2)), float(rng.uniform(0.2, 1.5))
+                        * TiB)
+    else:                                      # device add (append class)
+        nid = 900 + int(rng.integers(90))
+        if nid not in state.dev_by_id:
+            state.add_device(Device(id=nid, capacity=6 * TiB,
+                                    device_class="ssd", host=f"hx{nid}"))
+
+
+def _apply_foreign_movement(state) -> bool:
+    for pg in sorted(state.acting):
+        osds = state.acting[pg]
+        for slot, src in enumerate(osds):
+            for dst in state.devices:
+                if state.move_is_legal(pg, slot, dst.id):
+                    state.apply(Movement(pg, slot, src, dst.id,
+                                         state.shard_sizes[pg]))
+                    return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# property: every certificate skip is sound
+
+
+def _has_candidate(state, cfg, src_idx: int) -> bool:
+    """The faithful scan of one source, minus the variance test — the
+    exact predicate whose falsity the certificate asserts."""
+    cap = state.capacity_vector()
+    util = state.used() / cap
+    dst_order = np.argsort(util, kind="stable")
+    src_osd = state.devices[src_idx].id
+    for (pg, slot) in state.shards_on[src_osd]:
+        if state.shard_sizes[pg] <= 0.0:
+            continue
+        for dst_i in dst_order:
+            dst_i = int(dst_i)
+            if dst_i == src_idx:
+                break
+            if not state.move_is_legal(pg, slot, state.devices[dst_i].id,
+                                       headroom=cfg.headroom):
+                continue
+            if _count_criterion(state, pg, src_idx, dst_i, {},
+                                cfg.count_slack):
+                return True
+    return False
+
+
+def _balance_with_checked_bounds(state, cfg):
+    """Run the faithful engine with bounds, asserting at every skip that
+    the skipped source really has no candidate pair *right now*."""
+    from repro.core import equilibrium as eq
+    orig = eq.SourceBounds
+    skips = []
+
+    class Checking(orig):
+        def skip(self, src_idx):
+            hit = orig.skip(self, src_idx)
+            if hit:
+                assert not _has_candidate(state, cfg, src_idx), (
+                    f"unsound certificate: pruned source {src_idx} has a "
+                    f"candidate pair")
+                skips.append(src_idx)
+            return hit
+
+    eq.SourceBounds = Checking
+    try:
+        moves, _ = eq._balance(state, cfg, source_bounds=True)
+    finally:
+        eq.SourceBounds = orig
+    return moves, skips
+
+
+def _check_sound_and_identical(seed, ops):
+    """Both halves of the certificate contract on one (seed, ops) case:
+    every skip is justified at skip time, and the bounded faithful run
+    emits the exact move sequence of the plain one."""
+    state = small_test_cluster(seed=seed)
+    rng = np.random.default_rng(seed)
+    for op in ops:
+        _apply_op(state, op, rng)
+    plain, _ = _balance(state.copy(), EquilibriumConfig())
+    bounded, _ = _balance_with_checked_bounds(state, EquilibriumConfig())
+    assert tup(bounded) == tup(plain)
+    state.check_valid()
+
+
+# deterministic spine (hypothesis is optional in the container image)
+_CASES = [(s, ops) for s in (0, 3, 7, 11, 19)
+          for ops in ([], [0, 1], [2, 3, 1], [1, 0, 2, 3])]
+
+
+@pytest.mark.parametrize("seed,ops", _CASES)
+def test_bound_skips_sound_and_identical(seed, ops):
+    _check_sound_and_identical(seed, ops)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 40),
+       ops=st.lists(st.integers(0, 3), min_size=0, max_size=4))
+def test_bound_skips_sound_and_identical_property(seed, ops):
+    _check_sound_and_identical(seed, ops)
+
+
+@pytest.mark.parametrize("seed", [0, 2, 6, 13, 27])
+def test_dense_numpy_bounds_bit_identical(seed):
+    state = small_test_cluster(seed=seed)
+    plain = create_planner("equilibrium").plan(state.copy())
+    bounded = create_planner("equilibrium", source_bounds=True).plan(state)
+    assert tup(bounded.moves) == tup(plain.moves)
+    assert bounded.stats["source_bounds"] is True
+    assert plain.stats["source_bounds"] is False
+
+
+# ---------------------------------------------------------------------------
+# batch engine: the source_bounds × legality_cache opt-out matrix
+
+
+def _check_batch_matrix(seed, kb, rb):
+    state = small_test_cluster(seed=seed)
+    reference, _ = _balance(state.copy(), EquilibriumConfig())
+    for source_bounds in (False, True):
+        for legality_cache in (False, True):
+            result = create_planner(
+                "equilibrium_batch", source_block=kb, row_block=rb,
+                source_bounds=source_bounds,
+                legality_cache=legality_cache).plan(state.copy())
+            assert tup(result.moves) == tup(reference), (
+                f"bounds={source_bounds} cache={legality_cache}")
+            assert result.stats["source_bounds"] is source_bounds
+            assert result.stats["legality_cache"] is legality_cache
+
+
+@pytest.mark.parametrize("seed,kb,rb", [(0, 1, 8), (5, 2, 4), (9, 3, 5)])
+def test_batch_bounds_cache_matrix_bit_identical(seed, kb, rb):
+    _check_batch_matrix(seed, kb, rb)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 40), kb=st.integers(1, 3), rb=st.integers(2, 8))
+def test_batch_bounds_cache_matrix_property(seed, kb, rb):
+    _check_batch_matrix(seed, kb, rb)
+
+
+def _check_movement_only_absorption(seed, budget, n_moves):
+    """A pure foreign-movement delta run is the one absorption path that
+    keeps certificates alive (net carry-old → state-new sweep); the
+    continued warm sequence must still match a cold plan exactly."""
+    state = small_test_cluster(seed=seed)
+    planner = create_planner("equilibrium_batch", chunk=budget)
+    planner.plan(state, budget=budget)       # chunk == budget: no stash
+    for _ in range(n_moves):
+        if not _apply_foreign_movement(state):
+            break
+    cold, _ = _balance(state.copy(), EquilibriumConfig())
+    warm = planner.plan(state)
+    assert tup(warm.moves) == tup(cold)
+
+
+@pytest.mark.parametrize("seed,budget,n_moves",
+                         [(0, 2, 1), (4, 1, 3), (8, 5, 2)])
+def test_bounds_survive_movement_only_absorption(seed, budget, n_moves):
+    _check_movement_only_absorption(seed, budget, n_moves)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 40), budget=st.integers(1, 6),
+       n_moves=st.integers(1, 3))
+def test_bounds_survive_movement_only_absorption_property(seed, budget,
+                                                          n_moves):
+    _check_movement_only_absorption(seed, budget, n_moves)
+
+
+# ---------------------------------------------------------------------------
+# counter parity across engines
+
+
+def test_counters_agree_across_engines():
+    state = small_test_cluster(seed=3)
+    stats = {}
+    for name, kwargs in (
+            ("equilibrium_faithful", {"source_bounds": True}),
+            ("equilibrium", {"source_bounds": True}),
+            ("equilibrium_batch", {"source_block": 1})):
+        result = create_planner(name, **kwargs).plan(state.copy())
+        stats[name] = (tup(result.moves), result.stats)
+    ref_moves, ref = stats["equilibrium_faithful"]
+    assert ref["source_bounds"] is True
+    assert ref["pruned_sources"] > 0          # the tail exists even here
+    for name, (moves, s) in stats.items():
+        assert moves == ref_moves, name
+        assert s["sources_tried_hist"] == ref["sources_tried_hist"], name
+        assert s["bound_hits"] == ref["bound_hits"], name
+        assert s["pruned_sources"] == ref["pruned_sources"], name
+
+
+def test_jax_legacy_rejects_source_bounds():
+    state = small_test_cluster()
+    planner = create_planner("equilibrium_jax_legacy", source_bounds=True)
+    with pytest.raises(ValueError, match="source_bounds"):
+        planner.plan(state)
+
+
+# ---------------------------------------------------------------------------
+# compact_sources: stable partition of the top-k ranks
+
+
+def test_compact_sources_stable_partition():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.kernels.select_move import compact_sources
+
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n = int(rng.integers(4, 40))
+        k = int(rng.integers(1, n + 1))
+        order = rng.permutation(n)[:k].astype(np.int32)
+        pruned = rng.random(n) < rng.uniform(0, 1)
+        comp, count = compact_sources(jnp.asarray(order),
+                                      jnp.asarray(pruned))
+        expected = ([d for d in order.tolist() if not pruned[d]]
+                    + [d for d in order.tolist() if pruned[d]])
+        assert np.asarray(comp).tolist() == expected
+        assert int(count) == sum(not pruned[d] for d in order.tolist())

@@ -31,6 +31,8 @@ LEGALITY_NAMES = {
     "class_ok", "dst_count_ok", "src_count_ok", "capacity_limit",
     "capacity_ok", "variance_from_moments", "variance_improves",
     "before_source", "fullest_first",
+    # PR 6 source-bound certificates: the surgical invalidation events
+    "bound_crossed", "bound_capacity_binding", "count_flip_enables",
 }
 
 #: the one module allowed to define the vocabulary
