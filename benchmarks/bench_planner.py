@@ -22,7 +22,16 @@ throughput; one-time compile excluded — it is reported separately).
 Writes ``BENCH_planner.json`` rows ``{name, us_per_call, derived,
 git_sha}`` so the perf trajectory starts with this PR.
 
+Timing and the derived tail/prune columns come from the telemetry spine
+(:mod:`repro.obs`): the bench installs a tracer, wraps every timed call
+in a ``bench.call`` span (``counters=True``), reads the wall time back
+from the span and the tail columns from the schema-normalized
+``PlanResult.stats`` the registry populated.  ``--trace-out`` keeps the
+trace (default: in-memory only); ``python tools/tracestat.py`` on it
+reproduces every derived row from the trace alone.
+
     PYTHONPATH=src python -m benchmarks.bench_planner [--quick] [--out P]
+        [--trace-out P]
 """
 
 from __future__ import annotations
@@ -34,6 +43,7 @@ import time
 import numpy as np
 
 from benchmarks.run import git_sha
+from repro import obs
 from repro.core import EquilibriumConfig, create_planner
 from repro.core.clustergen import cluster_b
 from repro.core.equilibrium_jax import DenseState, _jax_select
@@ -149,6 +159,21 @@ ENGINES = (
 )
 
 
+def _timed_call(fn, state, cfg, row_name: str):
+    """One timed engine call as a ``bench.call`` span: the row's wall
+    time is the span's own clock and the attached counter deltas are the
+    trace-side double of the derived columns (``tools/tracestat.py
+    --bench`` recomputes tail share / prune rate / syncs per row from
+    them alone).  Falls back to a plain timer when no tracer is
+    installed (direct bench_cluster callers)."""
+    t0 = time.perf_counter()
+    with obs.span("bench.call", cat="bench", counters=True,
+                  name=row_name) as sp:
+        mv, stats = fn(state, cfg)
+        sp.set(moves=len(mv))
+    return mv, stats, (sp.wall_s or time.perf_counter() - t0)
+
+
 def _tail_derived(stats: dict) -> str:
     """Compact convergence-tail summary for the derived field."""
     hist = stats.get("sources_tried_hist")
@@ -166,9 +191,10 @@ def _tail_derived(stats: dict) -> str:
     pruned = stats.get("pruned_sources", 0)
     slots = sum(int(t) * c for t, c in hist.items())
     rate = hits / slots if slots > 0 else 0.0
+    syncs = stats.get("host_syncs", 0)
     return (f";tail_moves={tail}/{total};tail_time_share={share:.2f};"
             f"bound_hits={hits};pruned_sources={pruned};"
-            f"prune_rate={rate:.2f};tried_hist={full}")
+            f"prune_rate={rate:.2f};syncs={syncs};tried_hist={full}")
 
 
 def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
@@ -182,9 +208,9 @@ def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
         t0 = time.perf_counter()
         fn(initial.copy(), EquilibriumConfig(max_moves=warm))
         compile_s[label] = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        mv, stats = fn(initial.copy(), EquilibriumConfig(max_moves=cap))
-        dt = time.perf_counter() - t0
+        mv, stats, dt = _timed_call(fn, initial.copy(),
+                                    EquilibriumConfig(max_moves=cap),
+                                    f"planner.{tag}.{label}")
         per_s[label] = len(mv) / max(dt, 1e-9)
         tail[label] = _tail_derived(stats)
         sequences[label] = [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in mv]
@@ -232,9 +258,8 @@ def bench_tail(initial, tag: str, warm: int) -> list[dict]:
     sequences = {}
     for label, fn in TAIL_ENGINES:
         fn(initial.copy(), EquilibriumConfig(max_moves=warm))
-        t0 = time.perf_counter()
-        mv, stats = fn(initial.copy(), EquilibriumConfig())
-        dt = time.perf_counter() - t0
+        mv, stats, dt = _timed_call(fn, initial.copy(), EquilibriumConfig(),
+                                    f"planner.tail.{tag}.{label}")
         per_s[label] = len(mv) / max(dt, 1e-9)
         tail[label] = _tail_derived(stats)
         counts[label] = len(mv)
@@ -261,12 +286,20 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="paper scale only, short window")
     ap.add_argument("--out", default="BENCH_planner.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="keep the bench trace (*.jsonl native, otherwise "
+                         "Chrome/Perfetto JSON); default: in-memory only")
     args = ap.parse_args()
 
     cap = 120 if args.quick else 400
     warm = 16 if args.quick else 32
     scales = (1,) if args.quick else (1, 2)
 
+    # the spine is the bench clock: spans time the calls, the registry
+    # carries the per-call counters the derived columns summarize
+    started = not obs.enabled()
+    if started:
+        obs.start_tracing(args.trace_out)
     rows = []
     for scale in scales:
         t0 = time.perf_counter()
@@ -279,6 +312,10 @@ def main() -> None:
     if args.quick:
         from repro.core.clustergen import cluster_f
         rows += bench_tail(cluster_f(), "F", warm=warm)
+    if started:
+        obs.stop_tracing()
+        if args.trace_out:
+            print(f"wrote trace -> {args.trace_out}")
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows -> {args.out}")

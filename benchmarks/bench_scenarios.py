@@ -12,10 +12,18 @@ balancer and writes ``BENCH_scenarios.json``::
                          "pool_max_avail": {pid: [...]},
                          "transferred_bytes": [...], ...,
                          "summary": {...}},
-                         "wall_seconds": ...},
+                         "wall_seconds": ...,
+                         "counters": {"batch.rebuilds": 1, ...}},
         }, ...
       }
     }
+
+Wall times and the per-run ``counters`` block come from the telemetry
+spine (:mod:`repro.obs`): each run is a ``bench.call`` span whose
+attached registry deltas (rebuilds, host syncs, absorb traffic, moved
+bytes) are persisted next to the metrics, so engine-behaviour
+regressions are assertable from the artifact alone.  ``--trace-out``
+keeps the full trace.
 
 The per-tick series are the scenario counterpart of the paper's Fig 4-6
 trajectories; the summary comparison printed at the end is the lifecycle
@@ -33,10 +41,15 @@ import json
 import time
 
 from benchmarks.run import git_sha
+from repro import obs
 from repro.core import TiB, available_planners
 from repro.sim import SCENARIOS, run_scenario
 
 DEFAULT_BALANCERS = ("equilibrium_batch", "mgr")
+
+#: registry prefixes worth persisting per scenario run (the JSON
+#: ``counters`` block: engine activity, absorb traffic, sim throughput)
+COUNTER_PREFIXES = ("batch.", "absorb.", "sim.", "tail.", "planner.")
 
 
 def bench_scenarios(scenarios: list[str] | None = None,
@@ -51,10 +64,19 @@ def bench_scenarios(scenarios: list[str] | None = None,
     for name in names:
         per: dict[str, dict] = {}
         for bal in balancers:
+            # the bench.call span times the run; its counter deltas are
+            # the per-run engine activity (rebuilds, syncs, absorb
+            # traffic, moved bytes), persisted next to the metrics so
+            # regressions are assertable from the artifact alone
             t0 = time.perf_counter()
-            r = run_scenario(name, bal, seed=seed, quick=quick)
-            wall = time.perf_counter() - t0
+            with obs.span("bench.call", cat="bench", counters=True,
+                          name=f"scenario.{name}.{bal}") as sp:
+                r = run_scenario(name, bal, seed=seed, quick=quick)
+            wall = sp.wall_s or time.perf_counter() - t0
             r["wall_seconds"] = round(wall, 3)
+            r["counters"] = {
+                k: v for k, v in sp.args.get("counters", {}).items()
+                if k.startswith(COUNTER_PREFIXES)}
             per[bal] = r
             s = r["metrics"]["summary"]
             derived = (f"final_var={s['final_variance']:.3e};"
@@ -104,14 +126,24 @@ def main() -> None:
                          f"{available_planners()}")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_scenarios.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="keep the bench trace (*.jsonl native, otherwise "
+                         "Chrome/Perfetto JSON); default: in-memory only")
     args = ap.parse_args()
     balancers = tuple(b for b in args.balancers.split(",") if b)
     for b in balancers:
         if b not in available_planners():
             ap.error(f"unknown balancer {b!r}: expected one of "
                      f"{available_planners()}")
+    started = not obs.enabled()
+    if started:
+        obs.start_tracing(args.trace_out)
     bench_scenarios(args.scenario, balancers, seed=args.seed,
                     quick=args.quick, out=args.out)
+    if started:
+        obs.stop_tracing()
+        if args.trace_out:
+            print(f"wrote trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

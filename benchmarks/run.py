@@ -12,8 +12,15 @@ per-tick scenario results go to ``--scenarios-out`` (default
 ``BENCH_scenarios.json``); the two paths are guarded against clobbering
 each other.
 
+``--trace-out PATH`` additionally records the whole run through the
+telemetry spine (:mod:`repro.obs`): every planner call, batch chunk and
+scenario tick becomes a span, and the registry counters land in the
+trace footer — ``*.jsonl`` gets the native line format, any other suffix
+a Chrome/Perfetto trace JSON.  Like the other artifacts it is guarded
+against clobbering ``--json`` / ``--scenarios-out``.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
-        [--scenarios] [--scenarios-out PATH] [--seed N]
+        [--scenarios] [--scenarios-out PATH] [--seed N] [--trace-out PATH]
 """
 
 from __future__ import annotations
@@ -51,12 +58,23 @@ def main() -> None:
                     help="where the scenario suite writes its full results")
     ap.add_argument("--seed", type=int, default=0,
                     help="scenario-suite seed (ignored without --scenarios)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="also write a structured trace of the whole run "
+                         "(repro.obs): *.jsonl gets the native line format, "
+                         "any other suffix a Chrome/Perfetto trace JSON")
     args = ap.parse_args()
 
     if args.json and args.scenarios and \
             os.path.abspath(args.json) == os.path.abspath(args.scenarios_out):
         ap.error("--json and --scenarios-out point at the same file; the "
                  "rows artifact would clobber the scenario results")
+    if args.trace_out:
+        clashes = [args.json] + ([args.scenarios_out] if args.scenarios
+                                 else [])
+        if any(p and os.path.abspath(args.trace_out) == os.path.abspath(p)
+               for p in clashes):
+            ap.error("--trace-out points at another output artifact; the "
+                     "trace would clobber it")
 
     if args.scenarios:
         from benchmarks.bench_scenarios import bench_scenarios
@@ -85,6 +103,11 @@ def main() -> None:
             ("roofline", bench_roofline),
         ]
 
+    tracer = None
+    if args.trace_out:
+        from repro import obs
+        tracer = obs.start_tracing(args.trace_out)
+
     sha = git_sha()
     json_rows = []
     print("name,us_per_call,derived")
@@ -101,6 +124,10 @@ def main() -> None:
             print(f"{name},-1,FAILED:{e}")
             json_rows.append({"name": name, "us_per_call": -1,
                               "derived": f"FAILED:{e}", "git_sha": sha})
+    if tracer is not None:
+        from repro import obs
+        obs.stop_tracing()
+        print(f"# wrote trace -> {args.trace_out}", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(json_rows, f, indent=1)

@@ -11,6 +11,7 @@ annotations, then the summary — the interactive view of what
 
 import argparse
 
+from repro import obs
 from repro.core import TiB, available_planners
 from repro.sim import SCENARIOS, run_scenario
 
@@ -23,11 +24,17 @@ ap.add_argument("--seed", type=int, default=0)
 ap.add_argument("--quick", action="store_true", help="short tick count")
 ap.add_argument("--stride", type=int, default=1,
                 help="print every Nth tick")
+ap.add_argument("--trace-out", default=None, metavar="PATH",
+                help="write the run's repro.obs trace (*.jsonl native, "
+                     "otherwise Chrome/Perfetto JSON for tools/tracestat.py)")
 args = ap.parse_args()
 
 print(f"scenario {args.scenario!r} ({SCENARIOS[args.scenario].description})")
-result = run_scenario(args.scenario, args.balancer, seed=args.seed,
-                      quick=args.quick)
+# the run is traced (in-memory unless --trace-out): every tick and plan
+# call is a span, and the timing footer below is read back from it
+with obs.tracing(args.trace_out) as trace:
+    result = run_scenario(args.scenario, args.balancer, seed=args.seed,
+                          quick=args.quick)
 m = result["metrics"]
 events_at = {}
 for tick, desc in m["events"]:
@@ -51,3 +58,15 @@ print(f"\n{args.balancer}: final variance {s['final_variance']:.3e} "
       f"{s['total_planned_moves']} planned moves, "
       f"{s['ticks_above_threshold']} ticks above fullness threshold, "
       f"{s['final_degraded']} degraded shards")
+
+wall: dict[str, float] = {}
+for r in trace.records:
+    if r.get("ev") == "span":
+        wall[r["name"]] = wall.get(r["name"], 0.0) + r["dur"] / 1e6
+print(f"timing (repro.obs): scenario {wall.get('sim.scenario', 0.0):.2f}s, "
+      f"planner {wall.get('planner.plan', 0.0):.2f}s"
+      + (f", device chunks {wall['batch.chunk']:.2f}s"
+         if "batch.chunk" in wall else ""))
+if args.trace_out:
+    print(f"wrote trace -> {args.trace_out} "
+          f"(summarize: python tools/tracestat.py {args.trace_out})")

@@ -229,6 +229,7 @@ def _balance(state: ClusterState, cfg: EquilibriumConfig | None = None,
     if bounds is not None:
         acc["bound_hits"] = bounds.bound_hits
         acc["pruned"] = bounds.pruned_count
+        bounds.flush_counters()
     if stats_out is not None:
         stats_out["source_bounds"] = bool(source_bounds)
     _tail_flush(acc)

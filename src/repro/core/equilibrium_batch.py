@@ -72,6 +72,8 @@ from .cluster import (ClusterDelta, ClusterState, DeviceAddDelta,
 from .equilibrium import EquilibriumConfig, MoveRecord
 from .legality import LegalityState
 from .tail import tail_flush, tail_record, tail_stats, tail_terminal
+from .. import obs as _obs
+from ..obs import registry as _obs_registry
 
 try:  # pragma: no cover - JAX is always present in this repo
     import jax
@@ -84,26 +86,24 @@ except Exception:  # pragma: no cover
     _HAVE_JAX = False
 
 
-_SYNC_COUNT = 0
-_REBUILD_COUNT = 0
-
-
 def host_sync_count() -> int:
-    """Total device→host transfers issued by this engine (test hook)."""
-    return _SYNC_COUNT
+    """Total device→host transfers issued by this engine — a monotonic
+    read of the ``batch.host_syncs`` registry counter (test hook; tests
+    assert on before/after deltas)."""
+    return int(_obs_registry().get("batch.host_syncs"))
 
 
 def dense_rebuild_count() -> int:
-    """Total from-scratch dense-state builds (test hook for the warm-start
-    path: consecutive plans on an unchanged cluster must not rebuild)."""
-    return _REBUILD_COUNT
+    """Total from-scratch dense-state builds (``batch.rebuilds`` registry
+    counter; test hook for the warm-start path: consecutive plans on an
+    unchanged cluster must not rebuild)."""
+    return int(_obs_registry().get("batch.rebuilds"))
 
 
 def _fetch(tree):
     """The only device→host transfer point in this module: one call per
     planning chunk (plus one per re-pad), never per move or per source."""
-    global _SYNC_COUNT
-    _SYNC_COUNT += 1
+    _obs_registry().inc("batch.host_syncs")
     return jax.device_get(tree)
 
 
@@ -138,9 +138,9 @@ def _shift_insert(arr, pos, value):
 
 
 @partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached",
-                                   "bounds"))
+                                   "bounds", "telemetry"))
 def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
-                k, kb, rb, m, backend, cached, bounds):
+                k, kb, rb, m, backend, cached, bounds, telemetry=False):
     """Run up to ``m`` planning steps on-device.
 
     dyn   = (used, util, util_sum, util_sumsq, acting, pool_counts,
@@ -178,11 +178,19 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
     convergence tail skips fruitless sources without touching their
     legality tiles.
 
-    Returns (dyn', done, overflow, moves (m, 5) int32) where each move
-    row is (shard_row, src_idx, dst_idx, sources_tried, bound_skips) or
-    -1 sentinels; ``sources_tried`` counts ranks in the *full*
+    Returns (dyn', done, overflow, tel, moves (m, 5) int32) where each
+    move row is (shard_row, src_idx, dst_idx, sources_tried, bound_skips)
+    or -1 sentinels; ``sources_tried`` counts ranks in the *full*
     fullest-first order (identical with and without ``bounds``) and
     ``bound_skips`` of those ranks were skipped by live certificates.
+
+    ``tel`` is the device-side telemetry vector (int32[4]: legality
+    tiles walked, tiles holding a candidate, legality-cache hits,
+    legality-cache misses), populated only under the static ``telemetry``
+    flag — the disabled variant compiles the counter updates away
+    entirely, so tracing can never perturb the move sequence (it only
+    ever reads).  The host fetches it with the same per-chunk sync that
+    returns the moves.
     """
     (cap, dev_class, dev_in, dev_domain, sh_size, sh_pg, sh_pool,
      sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal) = const
@@ -196,7 +204,7 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
     dev_iota = jnp.arange(n_dev, dtype=jnp.int32)
     cap_lim = legality.capacity_limit(cap, headroom)  # loop-invariant
 
-    def select_one(dyn, active):
+    def select_one(dyn, active, tel):
         """One §3.1 planning step: walk (source-block, row-block) tiles of
         the batched legality tensor until the faithful winner is decided."""
         used, util, us, usq, acting, pool_counts, dst_ok, \
@@ -295,7 +303,7 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
 
         def body(carry):
             (sb, c, found_row, found_dst, win_j, win_row, win_dst, done,
-             c_dev, c_ok, c_clean, marg, pruned) = carry
+             c_dev, c_ok, c_clean, marg, pruned, tel) = carry
             src_b = lax.dynamic_slice_in_dim(src_order, sb * kb, kb)
             if cached:
                 zero = jnp.int32(0)
@@ -328,9 +336,15 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
                 c_clean = lax.dynamic_update_slice(c_clean, rowc,
                                                    (sb * kb, zero))
                 c_dev = lax.dynamic_update_slice(c_dev, src_b, (sb * kb,))
+                if telemetry:
+                    tel = tel.at[2].add(hit.astype(jnp.int32))
+                    tel = tel.at[3].add((~hit).astype(jnp.int32))
             else:
                 cand = eval_cand(sb, c)
             any_rows = jnp.any(cand, axis=(1, 2))            # (kb,)
+            if telemetry:
+                tel = tel.at[0].add(1)
+                tel = tel.at[1].add(jnp.any(any_rows).astype(jnp.int32))
             # the variance test + masked-select reduction only run when
             # the tile holds a candidate at all; the convergence-tail
             # walk is dominated by tiles that do not.  A dead tile's
@@ -391,7 +405,7 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             marg = jnp.where(exhausted, False, marg)
             return (next_sb, next_c, found_row, found_dst,
                     win_j, win_row, win_dst, done, c_dev, c_ok, c_clean,
-                    marg, pruned)
+                    marg, pruned, tel)
 
         def cond(carry):
             return active & ~carry[7]
@@ -399,10 +413,11 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
         init = (jnp.int32(0), jnp.int32(0), jnp.full((kb,), -1, jnp.int32),
                 jnp.zeros((kb,), jnp.int32), jnp.int32(-1), jnp.int32(-1),
                 jnp.int32(0), jnp.bool_(False), c_dev, c_ok, c_clean,
-                jnp.zeros((kb,), bool), pruned)
+                jnp.zeros((kb,), bool), pruned, tel)
         out = lax.while_loop(cond, body, init)
         win_j, win_row, win_dst = out[4], out[5], out[6]
         dyn = dyn[:10] + (out[8], out[9], out[10], out[12])
+        tel = out[13]
         found = win_j >= 0
         jw = jnp.clip(win_j, 0, k_pad - 1)
         win_dev = src_order[jw]
@@ -420,7 +435,8 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
                 win_dst,
                 rank + 1,
                 rank - jw,
-                dyn)
+                dyn,
+                tel)
 
     def reorder(order, util, src, dst):
         """Re-sort ``src`` and ``dst`` within the maintained stable
@@ -577,9 +593,10 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
                 rows_on, nrows, order, c_dev, c_ok, c_clean, pruned)
 
     def step(carry, _):
-        dyn, done, overflow = carry
+        dyn, done, overflow, tel = carry
         active = ~(done | overflow)
-        found, row, src, dst, tried, skipped, dyn = select_one(dyn, active)
+        found, row, src, dst, tried, skipped, dyn, tel = \
+            select_one(dyn, active, tel)
         # a full destination row-list would drop a shard: stop the chunk
         # and let the host re-pad (never hit when row_capacity >= max
         # rows/device + chunk, the packing invariant)
@@ -590,11 +607,13 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
                          jnp.full((5,), -1, jnp.int32))
         done = done | (active & ~found)
         overflow = overflow | ovf
-        return (dyn, done, overflow), emit
+        return (dyn, done, overflow, tel), emit
 
-    carry0 = (dyn, jnp.bool_(False), jnp.bool_(False))
-    (dyn, done, overflow), moves = lax.scan(step, carry0, None, length=m)
-    return dyn, done, overflow, moves
+    carry0 = (dyn, jnp.bool_(False), jnp.bool_(False),
+              jnp.zeros((4,), jnp.int32))
+    (dyn, done, overflow, tel), moves = lax.scan(step, carry0, None,
+                                                 length=m)
+    return dyn, done, overflow, tel, moves
 
 
 # ---------------------------------------------------------------------------
@@ -725,8 +744,10 @@ class BatchPlanner:
 
     def _build(self) -> None:
         """Full rebuild of the device mirror from ``self.state``."""
-        global _REBUILD_COUNT
-        _REBUILD_COUNT += 1
+        _obs_registry().inc("batch.rebuilds")
+        _obs.point("batch.rebuild", cat="batch",
+                   n_devices=self.state.n_devices,
+                   pending=len(self._pending), invalid=self._invalid)
         from .equilibrium_jax import DenseState
 
         state, cfg = self.state, self.cfg
@@ -1147,11 +1168,34 @@ class BatchPlanner:
         ) + self._fresh_cache(n_dev) + (jnp.asarray(pruned_np),)
         self._done = False
         self._absorbed_deltas += len(run)
+        reg = _obs_registry()
+        reg.inc("absorb.runs")
+        for d in run:
+            reg.inc("absorb.deltas", type=type(d).__name__)
+        _obs.point("batch.absorb", cat="batch", deltas=len(run),
+                   structural=bool(structural),
+                   kept_bounds=bool(keep_bounds))
         self._epoch = state.mutation_epoch
         self._drop_synced_pending()
         return True
 
     # -- planning ------------------------------------------------------------
+
+    def _registry_stats(self, snap: dict, stats_out: dict) -> None:
+        """Per-plan engine signals for ``PlanResult.stats``: deltas of
+        this engine's registry counters since plan entry (so the same
+        monotonic spine that feeds the trace footer also populates the
+        per-call stats — one write path, two read frequencies).
+        ``absorbed_deltas`` stays the planner-lifetime count it has
+        always been."""
+        d = _obs_registry().deltas_since(snap)
+        stats_out["rebuilds"] = int(d.get("batch.rebuilds", 0))
+        stats_out["host_syncs"] = int(d.get("batch.host_syncs", 0))
+        stats_out["jit_recompiles"] = int(d.get("batch.jit_recompiles", 0))
+        stats_out["stash_moves"] = int(d.get("batch.stash_moves", 0))
+        stats_out["cache_hits"] = int(d.get("batch.cache_hits", 0))
+        stats_out["cache_misses"] = int(d.get("batch.cache_misses", 0))
+        stats_out["absorbed_deltas"] = self._absorbed_deltas
 
     def _chunk_loop(self, budget: int
                     ) -> list[tuple[int, int, int, int, int, float]]:
@@ -1165,17 +1209,45 @@ class BatchPlanner:
         raw.extend(self._stash[:take])
         del self._stash[:take]
         state = self.state
+        reg = _obs_registry()
+        if take:
+            reg.inc("batch.stash_replayed", take)
+        # static jit flag: the telemetry carry compiles in only while a
+        # tracer is installed (toggling it costs one recompile, counted
+        # like any other); the disabled variant is the exact pre-obs
+        # computation, keeping plan bit-identity trivially
+        telemetry = _obs.enabled()
         while len(raw) < budget and not self._done:
-            t0 = time.perf_counter()
-            self._dyn, done, overflow, moves = _plan_chunk(
-                self._dyn, self._const, self._slack, self._headroom,
-                self._min_dvar, k=self._k, kb=self._kb, rb=self._rb,
-                m=self.chunk, backend=self.select_backend,
-                cached=self.legality_cache, bounds=self.source_bounds)
-            moves_np, done, overflow, nrows_np = _fetch(
-                (moves, done, overflow, self._dyn[8]))
-            dt = time.perf_counter() - t0
-            emitted = moves_np[moves_np[:, 0] >= 0]
+            with _obs.span("batch.chunk", cat="batch") as sp:
+                t0 = time.perf_counter()
+                jit0 = _plan_chunk._cache_size()
+                self._dyn, done, overflow, tel, moves = _plan_chunk(
+                    self._dyn, self._const, self._slack, self._headroom,
+                    self._min_dvar, k=self._k, kb=self._kb, rb=self._rb,
+                    m=self.chunk, backend=self.select_backend,
+                    cached=self.legality_cache, bounds=self.source_bounds,
+                    telemetry=telemetry)
+                moves_np, done, overflow, tel_np, nrows_np = _fetch(
+                    (moves, done, overflow, tel, self._dyn[8]))
+                dt = time.perf_counter() - t0
+                recompiles = _plan_chunk._cache_size() - jit0
+                if recompiles:
+                    reg.inc("batch.jit_recompiles", recompiles)
+                emitted = moves_np[moves_np[:, 0] >= 0]
+                if telemetry:
+                    reg.inc("batch.tiles_walked", int(tel_np[0]))
+                    reg.inc("batch.cand_tiles", int(tel_np[1]))
+                    if self.legality_cache:
+                        reg.inc("batch.cache_hits", int(tel_np[2]))
+                        reg.inc("batch.cache_misses", int(tel_np[3]))
+                if self.legality_cache:
+                    # a clean cache survives every applied move only
+                    # because apply_move column-repairs it in place —
+                    # one repair per emitted move (host-side knowledge,
+                    # needs no device counter)
+                    reg.inc("batch.cache_repairs", len(emitted))
+                sp.set(emitted=len(emitted), done=bool(done),
+                       overflow=bool(overflow), recompiles=recompiles)
             if len(emitted) == 0 and done and not overflow:
                 self._terminal_seconds += dt    # the fruitless final scan
                                                 # (not an overflow re-pad)
@@ -1186,6 +1258,10 @@ class BatchPlanner:
                 # device ran past the budget: the overshoot is already
                 # applied in the carry — hold it for the next call so the
                 # emitted stream stays the cold-start sequence
+                over = len(raw) - budget
+                if over:
+                    reg.inc("batch.stash_moves", over)
+                    _obs.point("batch.stash", cat="batch", moves=over)
                 self._stash = raw[budget:] + self._stash
                 del raw[budget:]
                 if done:
@@ -1201,6 +1277,9 @@ class BatchPlanner:
                 # restarts cold — the source bounds are not (their
                 # certificates say nothing about row geometry) and
                 # survive the re-pad
+                reg.inc("batch.repads")
+                _obs.point("batch.repad", cat="batch",
+                           r_cap=self._r_cap)
                 rows_np = _fetch(self._dyn[7])
                 self._r_cap = self._round_cap(int(nrows_np.max()) + self.chunk)
                 packed = np.full((state.n_devices, self._r_cap), -1, np.int32)
@@ -1230,6 +1309,8 @@ class BatchPlanner:
         """
         budget = self.cfg.max_moves if max_moves is None else max_moves
         state = self.state
+        snap = (_obs_registry().snapshot() if stats_out is not None
+                else None)
         with enable_x64():
             if self._epoch < 0:
                 self._build()
@@ -1240,6 +1321,7 @@ class BatchPlanner:
                     tail_flush(tail_stats(stats_out))
                     stats_out["legality_cache"] = self.legality_cache
                     stats_out["source_bounds"] = self.source_bounds
+                    self._registry_stats(snap, stats_out)
                 return [], []
             raw_moves = self._chunk_loop(budget)
             if stats_out is not None:
@@ -1256,6 +1338,7 @@ class BatchPlanner:
                 tail_flush(acc)
                 stats_out["legality_cache"] = self.legality_cache
                 stats_out["source_bounds"] = self.source_bounds
+                self._registry_stats(snap, stats_out)
 
             # -- reconcile with the dict-based model, replaying the move log
             dense = self._dense

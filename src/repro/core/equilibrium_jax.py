@@ -506,6 +506,7 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
     if bounds is not None:
         acc["bound_hits"] = bounds.bound_hits
         acc["pruned"] = bounds.pruned_count
+        bounds.flush_counters()
     if stats_out is not None:
         stats_out["source_bounds"] = bool(source_bounds)
     tail_flush(acc)

@@ -58,6 +58,8 @@ from .cluster import (ClusterDelta, ClusterState, DeviceAddDelta,
                       PoolCreateDelta, PoolGrowthDelta)
 from .equilibrium import EquilibriumConfig, MoveRecord, _balance
 from .mgr_balancer import MgrBalancerConfig, _balance as _mgr_balance
+from .. import obs as _obs
+from ..obs import finalize_stats
 
 __all__ = [
     "ClusterDelta", "MovementDelta", "PoolGrowthDelta", "DeviceAddDelta",
@@ -80,8 +82,10 @@ class PlanResult:
     per-move trajectory (empty unless ``record_trajectory=True``) in the
     shared :class:`~repro.core.equilibrium.MoveRecord` shape for every
     planner, including the mgr baseline.  ``stats`` carries engine
-    metadata: always ``planning_seconds`` and ``budget``; warm planners
-    add ``warm`` / ``rebuilds`` / ``absorbed_deltas``.
+    metadata under the single documented schema
+    :data:`repro.obs.schema.STATS_SCHEMA`: every registered planner
+    emits exactly the same key set (engine-specific signals default to
+    their neutral value), so consumers never branch per planner.
     """
 
     moves: list[Movement]
@@ -193,6 +197,30 @@ def _with_budget(cfg, budget: int | None):
                                                           max_moves=budget)
 
 
+def _plan_span(name: str):
+    """The per-plan telemetry span every built-in planner wraps its
+    plan() in: ``counters=True`` attributes the registry increments made
+    while planning (tail flushes, batch syncs, absorb runs) to this call
+    in the trace — the rows ``tools/tracestat.py`` aggregates."""
+    return _obs.span("planner.plan", cat="planner", counters=True,
+                     planner=name)
+
+
+def _finish(result: PlanResult, sp) -> PlanResult:
+    """Normalize and publish one plan result: funnel ``stats`` through
+    :func:`repro.obs.finalize_stats` (every registered planner emits the
+    same documented key set — equivalence-tested in tests/test_obs.py),
+    bump the planner throughput counters, annotate the span."""
+    finalize_stats(result.stats)
+    reg = _obs.registry()
+    reg.inc("planner.plans", planner=result.planner)
+    reg.inc("planner.moves", len(result.moves), planner=result.planner)
+    sp.set(moves=len(result.moves),
+           planning_seconds=result.stats["planning_seconds"],
+           engine=result.stats["engine"])
+    return result
+
+
 class _StatelessPlanner:
     """Shared base for planners that rebuild from the state every call:
     there is no warm state to invalidate, so every delta is trivially
@@ -222,16 +250,17 @@ class FaithfulEquilibriumPlanner(_StatelessPlanner):
 
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
-        t0 = time.perf_counter()
-        aux: dict = {}
-        moves, records = _balance(state, _with_budget(self.cfg, budget),
-                                  record_trajectory=record_trajectory,
-                                  record_free_space=record_free_space,
-                                  stats_out=aux,
-                                  source_bounds=self.source_bounds)
-        return PlanResult(moves, records, self.name, stats={
-            "planning_seconds": time.perf_counter() - t0,
-            "budget": budget, "engine": "faithful", **aux})
+        with _plan_span(self.name) as sp:
+            t0 = time.perf_counter()
+            aux: dict = {}
+            moves, records = _balance(state, _with_budget(self.cfg, budget),
+                                      record_trajectory=record_trajectory,
+                                      record_free_space=record_free_space,
+                                      stats_out=aux,
+                                      source_bounds=self.source_bounds)
+            return _finish(PlanResult(moves, records, self.name, stats={
+                "planning_seconds": time.perf_counter() - t0,
+                "budget": budget, "engine": "faithful", **aux}), sp)
 
 
 class _DensePlanner(_StatelessPlanner):
@@ -247,16 +276,17 @@ class _DensePlanner(_StatelessPlanner):
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
         from .equilibrium_jax import _balance_fast
-        t0 = time.perf_counter()
-        aux: dict = {}
-        moves, records = _balance_fast(
-            state, _with_budget(self.cfg, budget),
-            record_trajectory=record_trajectory,
-            record_free_space=record_free_space, engine=self.engine,
-            stats_out=aux, source_bounds=self.source_bounds)
-        return PlanResult(moves, records, self.name, stats={
-            "planning_seconds": time.perf_counter() - t0,
-            "budget": budget, "engine": self.engine, **aux})
+        with _plan_span(self.name) as sp:
+            t0 = time.perf_counter()
+            aux: dict = {}
+            moves, records = _balance_fast(
+                state, _with_budget(self.cfg, budget),
+                record_trajectory=record_trajectory,
+                record_free_space=record_free_space, engine=self.engine,
+                stats_out=aux, source_bounds=self.source_bounds)
+            return _finish(PlanResult(moves, records, self.name, stats={
+                "planning_seconds": time.perf_counter() - t0,
+                "budget": budget, "engine": self.engine, **aux}), sp)
 
 
 @register_planner("equilibrium", sim_config_attr="equilibrium",
@@ -322,7 +352,6 @@ class BatchEquilibriumPlanner:
 
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
-        from .equilibrium_batch import dense_rebuild_count
         impl = self._bind(state)
         if impl is None:                 # pragma: no cover - numpy fallback
             return self._fallback.plan(
@@ -330,18 +359,20 @@ class BatchEquilibriumPlanner:
                 record_free_space=record_free_space)
         if not self.warm:
             impl.reset()
-        t0 = time.perf_counter()
-        rebuilds0 = dense_rebuild_count()
-        aux: dict = {}
-        moves, records = impl.plan(max_moves=budget,
-                                   record_trajectory=record_trajectory,
-                                   record_free_space=record_free_space,
-                                   stats_out=aux)
-        return PlanResult(moves, records, self.name, stats={
-            "planning_seconds": time.perf_counter() - t0,
-            "budget": budget, "engine": "batch", "warm": self.warm,
-            "rebuilds": dense_rebuild_count() - rebuilds0,
-            "absorbed_deltas": impl._absorbed_deltas, **aux})
+        with _plan_span(self.name) as sp:
+            t0 = time.perf_counter()
+            # per-plan rebuilds / syncs / recompiles / stash / cache
+            # counters arrive in aux as registry deltas computed by
+            # BatchPlanner._registry_stats — the engine's own write path
+            aux: dict = {}
+            moves, records = impl.plan(max_moves=budget,
+                                       record_trajectory=record_trajectory,
+                                       record_free_space=record_free_space,
+                                       stats_out=aux)
+            return _finish(PlanResult(moves, records, self.name, stats={
+                "planning_seconds": time.perf_counter() - t0,
+                "budget": budget, "engine": "batch", "warm": self.warm,
+                **aux}), sp)
 
     def observe(self, delta: ClusterDelta) -> bool:
         if self._impl is None:
@@ -369,17 +400,24 @@ class MgrPlanner(_StatelessPlanner):
 
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
-        t0 = time.perf_counter()
-        moves, trajectory = _mgr_balance(state, _with_budget(self.cfg, budget),
-                                         record_trajectory=record_trajectory)
-        dt = time.perf_counter() - t0
-        per_move = dt / max(len(moves), 1)
-        records = [MoveRecord(movement=mv, variance_after=t["variance"],
-                              free_space_after=t["free_space"],
-                              planning_seconds=per_move, sources_tried=1)
-                   for mv, t in zip(moves, trajectory)]
-        return PlanResult(moves, records, self.name, stats={
-            "planning_seconds": dt, "budget": budget, "engine": "mgr"})
+        with _plan_span(self.name) as sp:
+            t0 = time.perf_counter()
+            moves, trajectory = _mgr_balance(
+                state, _with_budget(self.cfg, budget),
+                record_trajectory=record_trajectory)
+            dt = time.perf_counter() - t0
+            per_move = dt / max(len(moves), 1)
+            records = [MoveRecord(movement=mv, variance_after=t["variance"],
+                                  free_space_after=t["free_space"],
+                                  planning_seconds=per_move, sources_tried=1)
+                       for mv, t in zip(moves, trajectory)]
+            # mgr never falls through to another source: its whole wall
+            # time is selection, and every move has rank 1
+            hist = {"1": len(moves)} if moves else {}
+            return _finish(PlanResult(moves, records, self.name, stats={
+                "planning_seconds": dt, "budget": budget, "engine": "mgr",
+                "sources_tried_hist": hist, "selection_seconds": dt,
+                "moves_seconds": dt}), sp)
 
 
 @register_planner("none", description="no-op baseline: never plans a move")
@@ -388,5 +426,7 @@ class NonePlanner(_StatelessPlanner):
 
     def plan(self, state, *, budget=None, record_trajectory=False,
              record_free_space=True):
-        return PlanResult([], [], self.name, stats={
-            "planning_seconds": 0.0, "budget": budget, "engine": "none"})
+        with _plan_span(self.name) as sp:
+            return _finish(PlanResult([], [], self.name, stats={
+                "planning_seconds": 0.0, "budget": budget,
+                "engine": "none"}), sp)

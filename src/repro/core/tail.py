@@ -23,6 +23,7 @@ time.  This module owns the two pieces every engine shares:
 from __future__ import annotations
 
 from . import legality
+from ..obs import registry as _obs_registry
 
 
 # ---------------------------------------------------------------------------
@@ -58,12 +59,30 @@ def tail_terminal(acc: dict, seconds: float) -> None:
 
 
 def tail_flush(acc: dict) -> None:
+    """Flush the accumulator into ``stats_out`` (PlanResult.stats keys)
+    and the global metrics registry — the single write point through
+    which every engine's tail instrumentation reaches the telemetry
+    spine (``obs.span(..., counters=True)`` attributes these increments
+    to the enclosing plan span)."""
+    hist = acc["hist"]
+    tail_moves = sum(c for t, c in hist.items() if t > 1)
+    reg = _obs_registry()
+    reg.inc("tail.moves", sum(hist.values()))
+    reg.inc("tail.tail_moves", tail_moves)
+    # source-scan slots = Σ rank·count: the prune-rate denominator, so
+    # trace consumers can compute bound_hits/slots from counters alone
+    reg.inc("tail.scan_slots", sum(t * c for t, c in hist.items()))
+    reg.inc("tail.selection_seconds", acc["select"])
+    reg.inc("tail.apply_seconds", acc["apply"])
+    reg.inc("tail.tail_seconds", acc["tail"])
+    reg.inc("tail.terminal_seconds", acc["terminal"])
+    reg.inc("tail.bound_hits", acc["bound_hits"])
+    reg.set_gauge("tail.pruned_sources", acc["pruned"])
     if acc["out"] is None:
         return
-    hist = acc["hist"]
     acc["out"].update(
         sources_tried_hist={str(t): hist[t] for t in sorted(hist)},
-        tail_moves=sum(c for t, c in hist.items() if t > 1),
+        tail_moves=tail_moves,
         tail_seconds=acc["tail"],
         terminal_scan_seconds=acc["terminal"],
         selection_seconds=acc["select"], apply_seconds=acc["apply"],
@@ -107,11 +126,20 @@ class SourceBounds:
         self._pruned: dict[int, float] = {}   # src index -> largest shard
         self.bound_hits = 0                   # scans skipped by a live bound
         self._scan_hits = 0                   # ... within the current scan
+        self.scans = 0                        # begin_scan calls
+        self.prunes = 0                       # certificates issued
+        # certificates killed, by the trigger that fired (touch / holder
+        # / crossed / count_flip / capacity) — accumulated as cheap local
+        # ints and flushed to the metrics registry once per plan
+        # (:meth:`flush_counters`), so the per-move path never pays a
+        # registry write
+        self.invalidations: dict[str, int] = {}
 
     # -- scan-side -----------------------------------------------------
 
     def begin_scan(self) -> None:
         self._scan_hits = 0
+        self.scans += 1
 
     def skip(self, src_idx: int) -> bool:
         if src_idx in self._pruned:
@@ -129,6 +157,8 @@ class SourceBounds:
         self._scan_hits = 0
 
     def prune(self, src_idx: int, largest_shard: float) -> None:
+        if src_idx not in self._pruned:
+            self.prunes += 1
         self._pruned[src_idx] = float(largest_shard)
 
     @property
@@ -155,19 +185,44 @@ class SourceBounds:
         """
         if not self._pruned:
             return
-        self._pruned.pop(src_idx, None)
-        self._pruned.pop(dst_idx, None)
+        inv = self.invalidations
+        if self._pruned.pop(src_idx, None) is not None:
+            inv["touch"] = inv.get("touch", 0) + 1
+        if self._pruned.pop(dst_idx, None) is not None:
+            inv["touch"] = inv.get("touch", 0) + 1
         for h in holders:
-            self._pruned.pop(int(h), None)
+            if self._pruned.pop(int(h), None) is not None:
+                inv["holder"] = inv.get("holder", 0) + 1
         for s in list(self._pruned):
             if bool(legality.bound_crossed(util_src_before, util_src_after,
                                            util[s], src_idx, s)):
                 del self._pruned[s]
+                inv["crossed"] = inv.get("crossed", 0) + 1
             elif count_flip and holds_pool(s):
                 del self._pruned[s]
+                inv["count_flip"] = inv.get("count_flip", 0) + 1
             elif bool(legality.bound_capacity_binding(
                     used_src_before, cap_limit_src, self._pruned[s])):
                 del self._pruned[s]
+                inv["capacity"] = inv.get("capacity", 0) + 1
 
     def clear(self) -> None:
         self._pruned.clear()
+
+    # -- telemetry -----------------------------------------------------
+
+    def flush_counters(self) -> None:
+        """Flush the ledger's accumulated event counts into the global
+        metrics registry and zero them — called once per plan next to the
+        ``stats_out`` flush, so a ``counters=True`` span around ``plan()``
+        attributes the certificate activity to that plan."""
+        reg = _obs_registry()
+        if self.scans:
+            reg.inc("tail.scans", self.scans)
+            self.scans = 0
+        if self.prunes:
+            reg.inc("tail.prunes", self.prunes)
+            self.prunes = 0
+        for trigger, n in self.invalidations.items():
+            reg.inc("tail.invalidations", n, trigger=trigger)
+        self.invalidations.clear()

@@ -47,6 +47,7 @@ from ..core.mgr_balancer import MgrBalancerConfig
 from ..core.planner import (Planner, available_planners, create_planner,
                             get_planner_spec)
 from ..core.simulate import MovementThrottle, ThrottleConfig
+from .. import obs as _obs
 from .events import (DeviceAdd, DeviceFail, DeviceOut, Event, HostAdd,
                      PoolCreate, PoolGrowth, RebalanceTick)
 from .metrics import MetricsCollector
@@ -125,17 +126,30 @@ class ScenarioEngine:
     # -- main loop -----------------------------------------------------------
 
     def run(self) -> MetricsCollector:
+        reg = _obs.registry()
         for t in range(self.cfg.ticks):
-            for g in self.growth:
-                if g.applies_at(t):
-                    self.state.grow_pool(g.pool_id, g.bytes_per_tick)
-                    if t == g.tick:
-                        self.metrics.log_event(t, self._describe(g))
-            for ev in self.timeline.get(t, ()):
-                self._apply(t, ev)
-            self.throttle.tick()
-            self.metrics.collect(t, self.state, self.throttle,
-                                 self._planned_moves, self._degraded)
+            # one span per lifecycle tick: the nested planner.plan span
+            # carries the plan wall time; moved bytes and the throttle
+            # backlog land here
+            with _obs.span("sim.tick", cat="sim", tick=t) as sp:
+                planned0 = self._planned_moves
+                for g in self.growth:
+                    if g.applies_at(t):
+                        self.state.grow_pool(g.pool_id, g.bytes_per_tick)
+                        if t == g.tick:
+                            self.metrics.log_event(t, self._describe(g))
+                for ev in self.timeline.get(t, ()):
+                    self._apply(t, ev)
+                moved = self.throttle.tick()
+                self.metrics.collect(t, self.state, self.throttle,
+                                     self._planned_moves, self._degraded)
+                reg.inc("sim.ticks")
+                reg.inc("sim.moved_bytes", moved)
+                reg.set_gauge("sim.backlog_moves",
+                              self.throttle.backlog_moves)
+                sp.set(planned=self._planned_moves - planned0,
+                       moved_bytes=moved,
+                       backlog=self.throttle.backlog_moves)
         return self.metrics
 
     # -- event application ---------------------------------------------------
@@ -190,12 +204,14 @@ class ScenarioEngine:
     def _rebalance(self, t: int, ev: RebalanceTick) -> None:
         cap = self.cfg.backlog_cap
         if cap is not None and self.throttle.backlog_moves >= cap:
+            _obs.registry().inc("sim.backlog_skips")
             return
         budget = ev.max_moves if ev.max_moves >= 0 else self.cfg.moves_per_tick
         if budget <= 0:
             return
         result = self._planner.plan(self.state, budget=budget)
         self._planned_moves += len(result.moves)
+        _obs.registry().inc("sim.planned_moves", len(result.moves))
         self.throttle.enqueue(result.moves)
 
     # -- placement surgery ---------------------------------------------------

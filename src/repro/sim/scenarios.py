@@ -22,6 +22,7 @@ from ..core.cluster import GiB, PlacementRule, TiB
 from ..core.clustergen import sim_cluster
 from ..core.equilibrium import EquilibriumConfig
 from ..core.simulate import ThrottleConfig
+from .. import obs as _obs
 from .engine import ScenarioEngine, SimConfig
 from .events import (DeviceFail, DeviceOut, Event, HostAdd, PoolCreate,
                      PoolGrowth, RebalanceTick)
@@ -206,7 +207,14 @@ def run_scenario(name: str, balancer: str = "equilibrium_batch",
     state, events, cfg = scenario.build(seed, quick)
     cfg.balancer = balancer
     engine = ScenarioEngine(state, events, cfg)
-    metrics = engine.run()
+    # counters=True: the span's args carry every registry increment made
+    # over the run (rebuilds, syncs, absorb runs, moved bytes), so one
+    # trace row summarizes the whole scenario for tools/tracestat.py
+    with _obs.span("sim.scenario", cat="sim", counters=True,
+                   scenario=name, balancer=balancer, seed=seed,
+                   quick=quick) as sp:
+        metrics = engine.run()
+        sp.set(ticks=cfg.ticks)
     return {
         "scenario": name,
         "description": scenario.description,

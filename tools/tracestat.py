@@ -1,0 +1,182 @@
+#!/usr/bin/env python
+"""Summarize a :mod:`repro.obs` trace: top spans, syncs/move, prune
+rate, tail share, the absorb-vs-rebuild table.
+
+Reads either sink format (native ``.jsonl`` or the Chrome/Perfetto
+export — :func:`repro.obs.read_trace` normalizes both) and prints the
+aggregate views the benchmarks and CI assert on:
+
+* ``top spans`` — cumulative wall/CPU time and call count per span name;
+* ``planner`` — per-planner plan calls, moves, host syncs per move,
+  prune rate (``tail.bound_hits / tail.scan_slots``), tail share
+  (``tail.tail_seconds / (selection + apply)``), recompiles;
+* ``absorb vs rebuild`` — warm-path absorb runs per delta type against
+  cold dense rebuilds (the warm-start economics in one table);
+* ``bench rows`` (``--bench``) — recomputes each ``bench.call`` span's
+  derived columns from its attached counter deltas alone, proving the
+  ``BENCH_*.json`` rows derive from the trace.
+
+``--validate`` schema-checks the records (exit 1 on problems) and
+``--chrome OUT`` converts a JSONL trace for Perfetto / chrome://tracing.
+
+    PYTHONPATH=src python tools/tracestat.py TRACE [--validate]
+        [--bench] [--chrome OUT] [--top N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from repro.obs import read_trace, to_chrome, validate_trace
+
+
+def _fmt_s(us: float) -> str:
+    return f"{us / 1e6:.3f}s"
+
+
+def span_table(records: list[dict], top: int) -> list[tuple]:
+    """(name, calls, wall_us, cpu_us) rows, heaviest wall first."""
+    agg: dict[str, list] = defaultdict(lambda: [0, 0.0, 0.0])
+    for r in records:
+        if r.get("ev") != "span":
+            continue
+        row = agg[r["name"]]
+        row[0] += 1
+        row[1] += r.get("dur") or 0.0
+        row[2] += r.get("cpu") or 0.0
+    rows = sorted(((n, c, w, p) for n, (c, w, p) in agg.items()),
+                  key=lambda r: -r[2])
+    return rows[:top] if top else rows
+
+
+def footer_counters(records: list[dict]) -> dict[str, float]:
+    for r in reversed(records):
+        if r.get("ev") == "counters":
+            return r.get("values", {})
+    return {}
+
+
+def _labelled_total(counters: dict, prefix: str) -> float:
+    return sum(v for k, v in counters.items() if k.startswith(prefix))
+
+
+def derived_metrics(counters: dict) -> dict:
+    """The benchmark-derived quantities, from counters alone."""
+    moves = counters.get("tail.moves", 0)
+    syncs = counters.get("batch.host_syncs", 0)
+    slots = counters.get("tail.scan_slots", 0)
+    hits = counters.get("tail.bound_hits", 0)
+    sel = counters.get("tail.selection_seconds", 0.0)
+    app = counters.get("tail.apply_seconds", 0.0)
+    tail_s = counters.get("tail.tail_seconds", 0.0)
+    return {
+        "moves": int(moves),
+        "tail_moves": int(counters.get("tail.tail_moves", 0)),
+        "syncs": int(syncs),
+        "syncs_per_move": syncs / moves if moves else 0.0,
+        "bound_hits": int(hits),
+        "prune_rate": hits / slots if slots else 0.0,
+        "tail_share": tail_s / (sel + app) if sel + app > 0 else 0.0,
+        "recompiles": int(counters.get("batch.jit_recompiles", 0)),
+        "rebuilds": int(counters.get("batch.rebuilds", 0)),
+        "stash_moves": int(counters.get("batch.stash_moves", 0)),
+    }
+
+
+def print_summary(records: list[dict], top: int) -> None:
+    counters = footer_counters(records)
+
+    print("== top spans (cumulative) ==")
+    print(f"{'name':24s} {'calls':>7s} {'wall':>10s} {'cpu':>10s}")
+    for name, calls, wall, cpu in span_table(records, top):
+        print(f"{name:24s} {calls:7d} {_fmt_s(wall):>10s} {_fmt_s(cpu):>10s}")
+
+    d = derived_metrics(counters)
+    print("\n== planner ==")
+    plans = _labelled_total(counters, "planner.plans")
+    print(f"plan calls            {int(plans)}")
+    print(f"moves                 {d['moves']} "
+          f"(tail: {d['tail_moves']})")
+    print(f"host syncs            {d['syncs']} "
+          f"({d['syncs_per_move']:.2f}/move)")
+    print(f"prune rate            {d['prune_rate']:.2f} "
+          f"({d['bound_hits']} bound hits / "
+          f"{int(counters.get('tail.scan_slots', 0))} scan slots)")
+    print(f"tail share            {d['tail_share']:.2f}")
+    print(f"jit recompiles        {d['recompiles']}")
+    print(f"stash moves           {d['stash_moves']}")
+
+    print("\n== absorb vs rebuild ==")
+    print(f"dense rebuilds        {d['rebuilds']}")
+    print(f"absorb runs           {int(counters.get('absorb.runs', 0))}")
+    prefix = "absorb.deltas{type="
+    for k in sorted(counters):
+        if k.startswith(prefix):
+            dtype = k[len(prefix):-1]
+            print(f"  {dtype:20s} {int(counters[k])}")
+    invs = {k: v for k, v in counters.items()
+            if k.startswith("tail.invalidations")}
+    if invs:
+        print("certificate invalidations:")
+        for k in sorted(invs):
+            trig = k[k.index("{trigger=") + 9:-1]
+            print(f"  {trig:20s} {int(invs[k])}")
+
+
+def print_bench_rows(records: list[dict]) -> None:
+    """Recompute each bench.call row from its counter deltas alone."""
+    print("== bench rows (from trace) ==")
+    for r in records:
+        if r.get("ev") != "span" or r["name"] != "bench.call":
+            continue
+        args = r.get("args", {})
+        d = derived_metrics(args.get("counters", {}))
+        wall = (r.get("dur") or 0.0) / 1e6
+        moves = args.get("moves", d["moves"])
+        per_s = moves / wall if wall > 0 else 0.0
+        print(f"{args.get('name', '?')},"
+              f"moves={moves},moves_per_s={per_s:.1f},"
+              f"tail_time_share={d['tail_share']:.2f},"
+              f"bound_hits={d['bound_hits']},"
+              f"prune_rate={d['prune_rate']:.2f},"
+              f"syncs={d['syncs']}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="trace file (.jsonl or Chrome JSON)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the trace; exit 1 on problems")
+    ap.add_argument("--bench", action="store_true",
+                    help="recompute bench.call derived rows from the trace")
+    ap.add_argument("--chrome", metavar="OUT", default=None,
+                    help="write the Chrome/Perfetto conversion and exit")
+    ap.add_argument("--top", type=int, default=12,
+                    help="span-table row cap (0 = all)")
+    args = ap.parse_args()
+
+    records = read_trace(args.trace)
+    if args.validate:
+        problems = validate_trace(records)
+        if problems:
+            for p in problems:
+                print(f"INVALID: {p}", file=sys.stderr)
+            return 1
+        print(f"valid trace: {len(records)} records")
+    if args.chrome:
+        with open(args.chrome, "w") as f:
+            json.dump(to_chrome(records), f)
+        print(f"wrote {args.chrome}")
+        return 0
+    print_summary(records, args.top)
+    if args.bench:
+        print()
+        print_bench_rows(records)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
