@@ -80,7 +80,7 @@ try:  # pragma: no cover - JAX is always present in this repo
     import jax.numpy as jnp
     from jax import lax
     from jax.experimental import enable_x64
-    from ..kernels.select_move import compact_sources
+    from ..kernels.select_move import compact_parked
     _HAVE_JAX = True
 except Exception:  # pragma: no cover
     _HAVE_JAX = False
@@ -137,10 +137,9 @@ def _shift_insert(arr, pos, value):
 # The jitted chunk: select + apply up to `m` moves entirely on-device
 
 
-@partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached",
-                                   "bounds", "telemetry"))
-def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
-                k, kb, rb, m, backend, cached, bounds, telemetry=False):
+def _plan_chunk_impl(dyn, const, slack, headroom, min_dvar, n_real, k_eff,
+                     active0, *, k, kb, rb, m, backend, cached, bounds,
+                     telemetry=False):
     """Run up to ``m`` planning steps on-device.
 
     dyn   = (used, util, util_sum, util_sumsq, acting, pool_counts,
@@ -191,6 +190,21 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
     entirely, so tracing can never perturb the move sequence (it only
     ever reads).  The host fetches it with the same per-chunk sync that
     returns the moves.
+
+    ``n_real`` / ``k_eff`` / ``active0`` are *traced* per-cluster scalars
+    that make the step ``vmap``-safe across a fleet of clusters padded to
+    a common static shape (:mod:`repro.fleet`): ``n_real`` (float64) is
+    the cluster's true device count — the ``n`` of the variance
+    acceptance, which must not see shape padding; ``k_eff`` (int32 ≤ the
+    static ``k``) is the cluster's true source-queue depth — ranks past
+    it are parked exactly like pruned sources, so pad devices can never
+    win, prune, or extend the walk; ``active0`` (bool) seeds the chunk's
+    ``done`` flag, the early-exit mask for already-converged lanes (an
+    inactive lane's while_loop body never runs and its carry is returned
+    untouched).  The single-cluster wrapper :func:`_plan_chunk` passes
+    ``n_real = n_dev``, ``k_eff = k``, ``active0 = True``, which makes
+    every guard the constant it was before this factoring — the
+    sequences stay bit-identical (property-tested).
     """
     (cap, dev_class, dev_in, dev_domain, sh_size, sh_pg, sh_pool,
      sh_class, sh_level, sh_slot, sh_sbase, sh_scnt, ideal) = const
@@ -198,7 +212,8 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
     n_slots = dyn[4].shape[1]
     r_cap = dyn[7].shape[1]
     n_blocks = r_cap // rb              # _round_cap keeps r_cap % rb == 0
-    n_f = float(n_dev)
+    n_f = n_real                        # true device count, not the padded
+    #                                     shape — the variance criterion's n
     n_sb = -(-k // kb)
     k_pad = n_sb * kb
     dev_iota = jnp.arange(n_dev, dtype=jnp.int32)
@@ -215,10 +230,15 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
             # fullest-first order preserved), pruned sources parked at
             # the back.  Parked entries contribute no rows and can
             # neither win nor re-prune (the n_avail guards below), so the
-            # walk starts at the first plausible source.
-            src_order, n_avail = compact_sources(order_k, pruned)
+            # walk starts at the first plausible source.  Ranks past
+            # k_eff (fleet shape padding) park through the same
+            # partition: they sort behind every real rank and the
+            # n_avail count excludes them.
+            rank_k = jnp.arange(k, dtype=jnp.int32)
+            parked = pruned[order_k] | (rank_k >= k_eff)
+            src_order, n_avail = compact_parked(order_k, parked)
         else:
-            src_order, n_avail = order_k, jnp.int32(k)
+            src_order, n_avail = order_k, k_eff
         if k_pad > k:   # pad to a source-block multiple; masked from wins
             src_order = jnp.pad(src_order, (0, k_pad - k))
         rows_k = rows_on[src_order]         # (k_pad, r_cap), faithful order
@@ -609,11 +629,28 @@ def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
         overflow = overflow | ovf
         return (dyn, done, overflow, tel), emit
 
-    carry0 = (dyn, jnp.bool_(False), jnp.bool_(False),
+    carry0 = (dyn, ~active0, jnp.bool_(False),
               jnp.zeros((4,), jnp.int32))
     (dyn, done, overflow, tel), moves = lax.scan(step, carry0, None,
                                                  length=m)
     return dyn, done, overflow, tel, moves
+
+
+@partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached",
+                                   "bounds", "telemetry"))
+def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
+                k, kb, rb, m, backend, cached, bounds, telemetry=False):
+    """Single-cluster jitted entry over :func:`_plan_chunk_impl` — the
+    degenerate fleet of one: no shape padding (``n_real = n_dev``,
+    ``k_eff = k``) and an always-active lane.  Kept as the planner's
+    call target so the fleet factoring cannot perturb the single-cluster
+    sequence (the extra scalars fold to the constants they replaced)."""
+    n_dev = const[0].shape[0]
+    return _plan_chunk_impl(
+        dyn, const, slack, headroom, min_dvar,
+        jnp.asarray(float(n_dev), jnp.float64), jnp.int32(k),
+        jnp.bool_(True), k=k, kb=kb, rb=rb, m=m, backend=backend,
+        cached=cached, bounds=bounds, telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -1141,7 +1178,7 @@ class BatchPlanner:
                          & (pool_counts > 0.0)).any(axis=0)
                 largest = rows_np[:, 0]
                 maxsz = np.where(largest >= 0,
-                                 sh_size[np.clip(largest, 0)], 0.0)
+                                 sh_size[np.maximum(largest, 0)], 0.0)
                 lim = legality.capacity_limit(cap, cfg.headroom)
                 dropped = used < used_old
                 kill |= (dropped[:, None]
@@ -1180,6 +1217,75 @@ class BatchPlanner:
         return True
 
     # -- planning ------------------------------------------------------------
+
+    def sync(self) -> None:
+        """Bring the device carry up to date with the bound state:
+        cold-build on first use, absorb an absorbable pending delta run
+        into the warm carry, full rebuild as the fallback.  Callers must
+        hold ``enable_x64()`` (as :meth:`plan` and the fleet planner's
+        tick both do)."""
+        if self._epoch < 0:
+            self._build()
+        elif self.stale and not self._absorb():
+            self._build()
+
+    def _flush_stats(self, raw_moves, stats_out: dict, snap: dict, *,
+                     pruned: int | None = None) -> None:
+        """Populate ``stats_out`` for one plan call: the convergence-tail
+        instrumentation (same schema as the host-loop engines via
+        ``tail_flush``; selection and apply are fused on-device, so the
+        whole chunk-amortized move time is attributed to selection) plus
+        this engine's registry-counter deltas.  ``pruned`` lets a caller
+        that already fetched the pruned-source count (the fleet planner
+        batches that fetch across clusters) skip the per-planner sync."""
+        acc = tail_stats(stats_out)
+        for _row, _src, _dst, tried, skipped, secs in raw_moves:
+            tail_record(acc, tried, secs, 0.0)
+            acc["bound_hits"] += int(skipped)
+        tail_terminal(acc, self._terminal_seconds)
+        if pruned is not None:
+            acc["pruned"] = int(pruned)
+        elif self.source_bounds and self._dyn is not None:
+            acc["pruned"] = int(_fetch(jnp.sum(self._dyn[13])))
+        tail_flush(acc)
+        stats_out["legality_cache"] = self.legality_cache
+        stats_out["source_bounds"] = self.source_bounds
+        self._registry_stats(snap, stats_out)
+
+    def _reconcile(self, raw_moves, record_trajectory: bool,
+                   record_free_space: bool
+                   ) -> tuple[list[Movement], list["MoveRecord"]]:
+        """Replay the emitted move log through :meth:`ClusterState.apply`
+        (which re-validates every source assignment), exactly like
+        :func:`repro.core.simulate.simulate` replays movement logs, then
+        mark the carry synced to the resulting epoch."""
+        dense, state = self._dense, self.state
+        movements: list[Movement] = []
+        records: list[MoveRecord] = []
+        for row, src, dst, tried, _skipped, secs in raw_moves:
+            pg, slot = dense.shard_key[row]
+            mv = Movement(pg, slot, state.devices[src].id,
+                          state.devices[dst].id,
+                          float(dense.sh_size[row]))
+            state.apply(mv)              # re-validates source assignment
+            movements.append(mv)
+            if record_trajectory:
+                records.append(MoveRecord(
+                    movement=mv,
+                    variance_after=state.utilization_variance(),
+                    free_space_after=(state.total_pool_free_space()
+                                      if record_free_space
+                                      else float("nan")),
+                    planning_seconds=secs,
+                    sources_tried=tried,
+                ))
+        self._epoch = state.mutation_epoch
+        self._drop_synced_pending()     # our own replayed movements
+        # fully synced to the state: any backlog concern (e.g. our own
+        # replay overflowing PENDING_CAP on a large plan) is moot —
+        # staleness detection is the epoch compare, not this
+        self._invalid = False
+        return movements, records
 
     def _registry_stats(self, snap: dict, stats_out: dict) -> None:
         """Per-plan engine signals for ``PlanResult.stats``: deltas of
@@ -1308,14 +1414,10 @@ class BatchPlanner:
         (chunk-amortized, since selection and apply are fused on-device).
         """
         budget = self.cfg.max_moves if max_moves is None else max_moves
-        state = self.state
         snap = (_obs_registry().snapshot() if stats_out is not None
                 else None)
         with enable_x64():
-            if self._epoch < 0:
-                self._build()
-            elif self.stale and not self._absorb():
-                self._build()
+            self.sync()
             if self._dyn is None or budget <= 0:
                 if stats_out is not None:
                     tail_flush(tail_stats(stats_out))
@@ -1325,49 +1427,9 @@ class BatchPlanner:
                 return [], []
             raw_moves = self._chunk_loop(budget)
             if stats_out is not None:
-                # same schema as the host-loop engines (tail_flush);
-                # selection and apply are fused on-device, so the whole
-                # chunk-amortized move time is attributed to selection
-                acc = tail_stats(stats_out)
-                for _row, _src, _dst, tried, skipped, secs in raw_moves:
-                    tail_record(acc, tried, secs, 0.0)
-                    acc["bound_hits"] += int(skipped)
-                tail_terminal(acc, self._terminal_seconds)
-                if self.source_bounds and self._dyn is not None:
-                    acc["pruned"] = int(_fetch(jnp.sum(self._dyn[13])))
-                tail_flush(acc)
-                stats_out["legality_cache"] = self.legality_cache
-                stats_out["source_bounds"] = self.source_bounds
-                self._registry_stats(snap, stats_out)
-
-            # -- reconcile with the dict-based model, replaying the move log
-            dense = self._dense
-            movements: list[Movement] = []
-            records: list[MoveRecord] = []
-            for row, src, dst, tried, _skipped, secs in raw_moves:
-                pg, slot = dense.shard_key[row]
-                mv = Movement(pg, slot, state.devices[src].id,
-                              state.devices[dst].id,
-                              float(dense.sh_size[row]))
-                state.apply(mv)              # re-validates source assignment
-                movements.append(mv)
-                if record_trajectory:
-                    records.append(MoveRecord(
-                        movement=mv,
-                        variance_after=state.utilization_variance(),
-                        free_space_after=(state.total_pool_free_space()
-                                          if record_free_space
-                                          else float("nan")),
-                        planning_seconds=secs,
-                        sources_tried=tried,
-                    ))
-            self._epoch = state.mutation_epoch
-            self._drop_synced_pending()     # our own replayed movements
-            # fully synced to the state: any backlog concern (e.g. our
-            # own replay overflowing PENDING_CAP on a large plan) is
-            # moot — staleness detection is the epoch compare, not this
-            self._invalid = False
-        return movements, records
+                self._flush_stats(raw_moves, stats_out, snap)
+            return self._reconcile(raw_moves, record_trajectory,
+                                   record_free_space)
 
 
 def _balance_batch(state: ClusterState, cfg: EquilibriumConfig | None = None,

@@ -85,20 +85,67 @@ class _PoolShardIndex:
         bisect.insort(by_dev.setdefault(mv.dst_osd, []), (mv.pg, mv.slot))
 
 
-def _pool_round(state: ClusterState, pool_id: int, cfg: MgrBalancerConfig,
-                index: _PoolShardIndex | None = None) -> Movement | None:
-    """One attempted move for one pool; None if the pool aborts."""
-    index = index or _PoolShardIndex(state)
-    ideal = index.ideal(pool_id)
-    counts = state.pool_counts[pool_id].astype(np.float64)
-    deviation = counts - ideal
-    src_idx = int(np.argmax(deviation))
+class _DensePoolLedger:
+    """Stacked per-pool count bookkeeping for the sweep loop.
+
+    ``_balance`` historically recomputed each pool's deviation vector —
+    a dense ``counts - ideal`` over every device — *inside* the
+    sequential per-pool loop, once per pool per sweep, plus a fresh
+    ``state.pool_counts`` copy each time.  Both stack: ideals are
+    loop-invariant (capacities don't change while balancing) and counts
+    change by exactly ±1 at a move's two endpoints, so this ledger keeps
+    one ``(n_pools, n_devices)`` float64 counts matrix maintained
+    incrementally and materializes **all** pools' deviations, worst
+    sources and stable destination orders in one vectorized pass per
+    sweep (:meth:`sweep`).
+
+    Bit-identity with the per-pool recompute is structural: counts are
+    integer-valued (±1.0 updates are exact in float64), so each row of
+    ``counts - ideal`` is the same expression on the same values the old
+    loop evaluated, and a move only perturbs its *own* pool's row — rows
+    read later in the same sweep are untouched (the mgr balancer has no
+    cross-pool coupling).  Verified move-sequence-identical against the
+    per-pool reference in tests/test_balancers.py.
+    """
+
+    def __init__(self, state: ClusterState):
+        self.state = state
+        self.pool_ids = sorted(state.pools.keys())
+        self.row = {pid: i for i, pid in enumerate(self.pool_ids)}
+        n_dev = state.n_devices
+        if self.pool_ids:
+            self.ideal = np.stack([state.ideal_shard_count(state.pools[p])
+                                   for p in self.pool_ids])
+            self.counts = np.stack([state.pool_counts[p]
+                                    for p in self.pool_ids]
+                                   ).astype(np.float64)
+        else:
+            self.ideal = np.zeros((0, n_dev))
+            self.counts = np.zeros((0, n_dev))
+
+    def apply(self, mv: Movement) -> None:
+        r = self.row[mv.pg[0]]
+        self.counts[r, self.state.idx(mv.src_osd)] -= 1.0
+        self.counts[r, self.state.idx(mv.dst_osd)] += 1.0
+
+    def sweep(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One dense pass for the whole sweep: per-pool deviations
+        (n_pools, n_devices), worst-source indices (n_pools,) and stable
+        lowest-deviation-first destination orders (n_pools, n_devices)."""
+        deviation = self.counts - self.ideal
+        return (deviation, np.argmax(deviation, axis=1),
+                np.argsort(deviation, axis=1, kind="stable"))
+
+
+def _attempt_move(state: ClusterState, pool_id: int, cfg: MgrBalancerConfig,
+                  index: _PoolShardIndex, deviation: np.ndarray,
+                  src_idx: int, order: np.ndarray) -> Movement | None:
+    """The §2.3.1 selection body for one pool, given its deviation row,
+    worst source and destination order; None if the pool aborts."""
     if deviation[src_idx] <= cfg.deviation:
         return None                                    # pool is balanced
     src_osd = state.devices[src_idx].id
 
-    # destinations: lowest deviation first (size-blind)
-    order = np.argsort(deviation, kind="stable")
     # shards of this pool on the source, ascending (pg, slot) — the mgr
     # balancer does not consider shard size.
     shards = index.shards(pool_id, src_osd)
@@ -116,6 +163,22 @@ def _pool_round(state: ClusterState, pool_id: int, cfg: MgrBalancerConfig,
     return None
 
 
+def _pool_round(state: ClusterState, pool_id: int, cfg: MgrBalancerConfig,
+                index: _PoolShardIndex | None = None) -> Movement | None:
+    """One attempted move for one pool; None if the pool aborts.  The
+    per-pool reference path (fresh deviation/argmax/argsort per call) the
+    dense sweep in ``_balance`` is sequence-verified against."""
+    index = index or _PoolShardIndex(state)
+    ideal = index.ideal(pool_id)
+    counts = state.pool_counts[pool_id].astype(np.float64)
+    deviation = counts - ideal
+    src_idx = int(np.argmax(deviation))
+    # destinations: lowest deviation first (size-blind)
+    order = np.argsort(deviation, kind="stable")
+    return _attempt_move(state, pool_id, cfg, index, deviation, src_idx,
+                         order)
+
+
 def _balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
              record_trajectory: bool = False):
     """Generate movements until every pool is count-balanced or aborts.
@@ -130,16 +193,25 @@ def _balance(state: ClusterState, cfg: MgrBalancerConfig | None = None,
     movements: list[Movement] = []
     trajectory: list[dict] = []
     index = _PoolShardIndex(state)
+    ledger = _DensePoolLedger(state)
     active = set(state.pools.keys())
     while active and len(movements) < cfg.max_moves:
         progressed = False
+        # one vectorized pass ranks every pool's sources/destinations for
+        # the whole sweep (a move only perturbs its own pool's row, so
+        # rows read later in the sweep are exactly what a per-pool
+        # recompute would produce)
+        deviation, src, order = ledger.sweep()
         for pool_id in sorted(active):
-            mv = _pool_round(state, pool_id, cfg, index)
+            r = ledger.row[pool_id]
+            mv = _attempt_move(state, pool_id, cfg, index, deviation[r],
+                               int(src[r]), order[r])
             if mv is None:
                 active.discard(pool_id)
                 continue
             state.apply(mv)
             index.apply(mv)
+            ledger.apply(mv)
             movements.append(mv)
             progressed = True
             if record_trajectory:

@@ -142,6 +142,14 @@ class PlannerSpec:
 
 _REGISTRY: dict[str, PlannerSpec] = {}
 
+#: planners whose defining module lives *above* repro.core (importing it
+#: here eagerly would be a dependency cycle): resolved on first lookup by
+#: importing the named module, whose import-time ``@register_planner``
+#: fills the registry slot.
+_LAZY_PLANNERS: dict[str, str] = {
+    "fleet": "repro.fleet.planner",
+}
+
 
 def register_planner(name: str, *, sim_config_attr: str | None = None,
                      description: str = "", replace: bool = False):
@@ -157,6 +165,9 @@ def register_planner(name: str, *, sim_config_attr: str | None = None,
 
 
 def get_planner_spec(name: str) -> PlannerSpec:
+    if name not in _REGISTRY and name in _LAZY_PLANNERS:
+        import importlib
+        importlib.import_module(_LAZY_PLANNERS[name])
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -165,8 +176,8 @@ def get_planner_spec(name: str) -> PlannerSpec:
 
 
 def available_planners() -> tuple[str, ...]:
-    """Registered planner names, sorted."""
-    return tuple(sorted(_REGISTRY))
+    """Registered planner names (lazy ones included), sorted."""
+    return tuple(sorted(_REGISTRY.keys() | _LAZY_PLANNERS.keys()))
 
 
 def create_planner(name: str, **kwargs) -> Planner:

@@ -1,0 +1,27 @@
+"""repro.fleet — vmapped multi-cluster planning as a service.
+
+The batch engine (:mod:`repro.core.equilibrium_batch`) plans one
+cluster per dispatch; this package plans a *fleet*: independent
+clusters are padded into shared shape buckets (:mod:`~repro.fleet.pack`),
+one ``jax.vmap`` of the same jitted chunk step plans every cluster in a
+bucket per dispatch (:mod:`~repro.fleet.planner` — bit-identical per
+cluster to serial runs, property-tested), and a daemon-shaped service
+loop (:mod:`~repro.fleet.service`) adds streaming delta ingestion and a
+latency SLO that cuts a tick into valid partial plans.  The load
+generator (:mod:`~repro.fleet.loadgen`) drives the existing sim
+scenarios as N concurrent lifecycles for benchmarks and CI.
+
+The planner registers as ``create_planner("fleet")`` (resolved lazily
+by :mod:`repro.core.planner` to keep the core free of upward imports).
+"""
+
+from .pack import BucketShape, CarryDims, FleetPack
+from .planner import FleetPlanner
+from .service import FleetService, FleetTickResult
+from .loadgen import FleetLoadGen, FleetScenarioEngine
+
+__all__ = [
+    "BucketShape", "CarryDims", "FleetPack", "FleetPlanner",
+    "FleetService", "FleetTickResult", "FleetLoadGen",
+    "FleetScenarioEngine",
+]

@@ -83,6 +83,30 @@ def masked_select_fwd(valid: jax.Array, util: jax.Array, *,
     return any_out[:M], dst_out[:M]
 
 
+def compact_parked(order_k: jax.Array,
+                   parked: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stable partition of the top-k source ranks by an arbitrary
+    per-rank ``parked`` mask: unparked ranks first (fullest-first order
+    preserved), parked ranks at the back.
+
+    order_k: (k,) device indices, fullest first.  parked: (k,) bool, one
+    flag per *rank*.  Returns (compacted (k,) order, int32 count of
+    unparked ranks).  k is a handful of lanes, so this is a jnp sort,
+    not a Pallas grid; the stable partition is encoded in the sort key
+    (parked ranks shifted past every unparked rank) to avoid relying on
+    argsort stability.
+
+    The per-rank mask is what lets the fleet planner
+    (:mod:`repro.fleet.planner`) park the shape-padding ranks beyond a
+    cluster's true ``k_eff`` through the same partition its pruned
+    sources use — one code path, one proof of order preservation.
+    """
+    k = order_k.shape[0]
+    rank = jnp.arange(k, dtype=jnp.int32)
+    perm = jnp.argsort(jnp.where(parked, rank + k, rank))
+    return order_k[perm], jnp.sum(~parked).astype(jnp.int32)
+
+
 def compact_sources(order_k: jax.Array,
                     pruned: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Masked-select over the pruned source set: stable partition of the
@@ -94,13 +118,6 @@ def compact_sources(order_k: jax.Array,
     The scan then starts at the first plausible source and stops after
     ``count`` ranks; parked entries keep their devices (so downstream
     gathers stay in-bounds) but are masked out of winning/pruning by the
-    ``count`` guard.  k is a handful of lanes, so this is a jnp sort, not
-    a Pallas grid; the stable partition is encoded in the sort key
-    (parked ranks shifted past every unparked rank) to avoid relying on
-    argsort stability.
+    ``count`` guard.
     """
-    k = order_k.shape[0]
-    parked = pruned[order_k]
-    rank = jnp.arange(k, dtype=jnp.int32)
-    perm = jnp.argsort(jnp.where(parked, rank + k, rank))
-    return order_k[perm], jnp.sum(~parked).astype(jnp.int32)
+    return compact_parked(order_k, pruned[order_k])

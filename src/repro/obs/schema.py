@@ -26,6 +26,15 @@ Key groups:
   :data:`STASH_MOVES`, :data:`REBUILDS`, :data:`ABSORBED_DELTAS`,
   :data:`WARM`, :data:`LEGALITY_CACHE`, :data:`CACHE_HITS`,
   :data:`CACHE_MISSES` (0 / False on engines without the machinery);
+* fleet-service signals (:mod:`repro.fleet`) — :data:`FLEET_CLUSTERS`
+  (fleet size the plan was batched with; 0 outside a fleet tick),
+  :data:`SLO_DEADLINE_SECONDS` / :data:`SLO_EXPIRED` (the latency-SLO
+  knob and whether this plan was cut short by it — a partial but valid
+  plan), :data:`PLAN_FRESHNESS_SECONDS` (plan-freshness lag: wall time
+  between this cluster's delta sync and its plan emission),
+  :data:`CONVERGED` / :data:`VARIANCE_AFTER` (plan-quality: did the
+  engine certify no further move exists, and the utilization variance
+  the plan left behind);
 * identity — :data:`ENGINE`, :data:`BUDGET`.
 """
 
@@ -37,7 +46,9 @@ __all__ = [
     "SOURCES_TRIED_HIST", "TAIL_MOVES", "TAIL_SECONDS",
     "TERMINAL_SCAN_SECONDS", "SELECTION_SECONDS", "APPLY_SECONDS",
     "MOVES_SECONDS", "BOUND_HITS", "PRUNED_SOURCES", "SOURCE_BOUNDS",
-    "LEGALITY_CACHE", "CACHE_HITS", "CACHE_MISSES", "STATS_SCHEMA",
+    "LEGALITY_CACHE", "CACHE_HITS", "CACHE_MISSES", "FLEET_CLUSTERS",
+    "SLO_DEADLINE_SECONDS", "SLO_EXPIRED", "PLAN_FRESHNESS_SECONDS",
+    "CONVERGED", "VARIANCE_AFTER", "STATS_SCHEMA",
     "finalize_stats", "validate_stats", "validate_trace",
 ]
 
@@ -63,6 +74,12 @@ SOURCE_BOUNDS = "source_bounds"
 LEGALITY_CACHE = "legality_cache"
 CACHE_HITS = "cache_hits"
 CACHE_MISSES = "cache_misses"
+FLEET_CLUSTERS = "fleet_clusters"
+SLO_DEADLINE_SECONDS = "slo_deadline_seconds"
+SLO_EXPIRED = "slo_expired"
+PLAN_FRESHNESS_SECONDS = "plan_freshness_seconds"
+CONVERGED = "converged"
+VARIANCE_AFTER = "variance_after"
 
 #: key -> (accepted types, neutral default).  ``BUDGET`` may be None
 #: (planner default); everything else is concrete.
@@ -89,6 +106,12 @@ STATS_SCHEMA: dict[str, tuple[tuple, object]] = {
     LEGALITY_CACHE: ((bool,), False),
     CACHE_HITS: ((int,), 0),
     CACHE_MISSES: ((int,), 0),
+    FLEET_CLUSTERS: ((int,), 0),
+    SLO_DEADLINE_SECONDS: ((float, type(None)), None),
+    SLO_EXPIRED: ((bool,), False),
+    PLAN_FRESHNESS_SECONDS: ((float,), 0.0),
+    CONVERGED: ((bool,), False),
+    VARIANCE_AFTER: ((float,), 0.0),
 }
 
 

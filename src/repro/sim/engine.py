@@ -126,31 +126,51 @@ class ScenarioEngine:
     # -- main loop -----------------------------------------------------------
 
     def run(self) -> MetricsCollector:
-        reg = _obs.registry()
         for t in range(self.cfg.ticks):
-            # one span per lifecycle tick: the nested planner.plan span
-            # carries the plan wall time; moved bytes and the throttle
-            # backlog land here
-            with _obs.span("sim.tick", cat="sim", tick=t) as sp:
-                planned0 = self._planned_moves
-                for g in self.growth:
-                    if g.applies_at(t):
-                        self.state.grow_pool(g.pool_id, g.bytes_per_tick)
-                        if t == g.tick:
-                            self.metrics.log_event(t, self._describe(g))
-                for ev in self.timeline.get(t, ()):
-                    self._apply(t, ev)
-                moved = self.throttle.tick()
-                self.metrics.collect(t, self.state, self.throttle,
-                                     self._planned_moves, self._degraded)
-                reg.inc("sim.ticks")
-                reg.inc("sim.moved_bytes", moved)
-                reg.set_gauge("sim.backlog_moves",
-                              self.throttle.backlog_moves)
-                sp.set(planned=self._planned_moves - planned0,
-                       moved_bytes=moved,
-                       backlog=self.throttle.backlog_moves)
+            self.step(t)
         return self.metrics
+
+    def step(self, t: int) -> None:
+        """One lifecycle tick: events (including inline planning), then
+        the transfer/metrics bookkeeping.  The tick is split so drivers
+        that plan *between* the phases — the fleet load generator
+        (:mod:`repro.fleet.loadgen`) batches every engine's rebalance
+        request into one vmapped fleet tick — reuse the exact event and
+        bookkeeping semantics."""
+        # one span per lifecycle tick: the nested planner.plan span
+        # carries the plan wall time; moved bytes and the throttle
+        # backlog land here
+        with _obs.span("sim.tick", cat="sim", tick=t) as sp:
+            planned0 = self._planned_moves
+            self.apply_tick_events(t)
+            self.finish_tick(t, planned0=planned0, sp=sp)
+
+    def apply_tick_events(self, t: int) -> None:
+        """Phase 1 of a tick: pool growth, then this tick's timeline
+        events in order (RebalanceTicks plan through ``_rebalance``)."""
+        for g in self.growth:
+            if g.applies_at(t):
+                self.state.grow_pool(g.pool_id, g.bytes_per_tick)
+                if t == g.tick:
+                    self.metrics.log_event(t, self._describe(g))
+        for ev in self.timeline.get(t, ()):
+            self._apply(t, ev)
+
+    def finish_tick(self, t: int, planned0: int = 0, sp=None) -> None:
+        """Phase 2 of a tick: advance the movement throttle, sample
+        physical-occupancy metrics, update the sim registry counters."""
+        reg = _obs.registry()
+        moved = self.throttle.tick()
+        self.metrics.collect(t, self.state, self.throttle,
+                             self._planned_moves, self._degraded)
+        reg.inc("sim.ticks")
+        reg.inc("sim.moved_bytes", moved)
+        reg.set_gauge("sim.backlog_moves",
+                      self.throttle.backlog_moves)
+        if sp is not None:
+            sp.set(planned=self._planned_moves - planned0,
+                   moved_bytes=moved,
+                   backlog=self.throttle.backlog_moves)
 
     # -- event application ---------------------------------------------------
 
@@ -201,18 +221,27 @@ class ScenarioEngine:
 
     # -- balancing -----------------------------------------------------------
 
-    def _rebalance(self, t: int, ev: RebalanceTick) -> None:
+    def _tick_budget(self, ev: RebalanceTick) -> int | None:
+        """Resolve one RebalanceTick to a positive planning budget, or
+        None when it should not plan (saturated backlog / zero budget)."""
         cap = self.cfg.backlog_cap
         if cap is not None and self.throttle.backlog_moves >= cap:
             _obs.registry().inc("sim.backlog_skips")
-            return
+            return None
         budget = ev.max_moves if ev.max_moves >= 0 else self.cfg.moves_per_tick
-        if budget <= 0:
-            return
-        result = self._planner.plan(self.state, budget=budget)
+        return budget if budget > 0 else None
+
+    def _accept(self, result) -> None:
+        """Book one plan's moves into the tick: counters + throttle."""
         self._planned_moves += len(result.moves)
         _obs.registry().inc("sim.planned_moves", len(result.moves))
         self.throttle.enqueue(result.moves)
+
+    def _rebalance(self, t: int, ev: RebalanceTick) -> None:
+        budget = self._tick_budget(ev)
+        if budget is None:
+            return
+        self._accept(self._planner.plan(self.state, budget=budget))
 
     # -- placement surgery ---------------------------------------------------
 

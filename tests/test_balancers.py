@@ -99,6 +99,46 @@ def test_mgr_balances_counts():
         assert (counts[eligible] - ideal[eligible]).max() <= 2.0
 
 
+def _mgr_reference_balance(state, cfg):
+    """The pre-ledger sweep loop: fresh per-pool deviation/argmax/argsort
+    (via ``_pool_round``) at each pool visit — the sequence the dense
+    one-pass-per-sweep ledger in ``_balance`` must reproduce exactly."""
+    from repro.core.mgr_balancer import _PoolShardIndex, _pool_round
+    movements = []
+    index = _PoolShardIndex(state)
+    active = set(state.pools.keys())
+    while active and len(movements) < cfg.max_moves:
+        progressed = False
+        for pool_id in sorted(active):
+            mv = _pool_round(state, pool_id, cfg, index)
+            if mv is None:
+                active.discard(pool_id)
+                continue
+            state.apply(mv)
+            index.apply(mv)
+            movements.append(mv)
+            progressed = True
+            if len(movements) >= cfg.max_moves:
+                break
+        if not progressed:
+            break
+    return movements
+
+
+@pytest.mark.parametrize("max_moves", [7, 10_000])
+def test_mgr_dense_sweep_matches_per_pool_reference(max_moves):
+    """The vectorized per-sweep ideal/deviation pass emits exactly the
+    per-pool recompute's move sequence (counts are integer-valued in
+    float64 and a move only perturbs its own pool's row)."""
+    from repro.core.clustergen import sim_cluster
+    for seed in (0, 1, 2):
+        cfg = MgrBalancerConfig(deviation=1.0, max_moves=max_moves)
+        ref = _mgr_reference_balance(sim_cluster(seed=seed, n_hdd=12), cfg)
+        dense, _ = mgr_balance(sim_cluster(seed=seed, n_hdd=12), cfg)
+        assert [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in ref] == \
+               [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in dense]
+
+
 def test_mgr_is_size_blind_equilibrium_is_not():
     """On a count-balanced but size-skewed cluster, mgr finds nothing while
     Equilibrium still improves — the paper's central differentiator."""

@@ -14,7 +14,11 @@ aggregate views the benchmarks and CI assert on:
   cold dense rebuilds (the warm-start economics in one table);
 * ``bench rows`` (``--bench``) — recomputes each ``bench.call`` span's
   derived columns from its attached counter deltas alone, proving the
-  ``BENCH_*.json`` rows derive from the trace.
+  ``BENCH_*.json`` rows derive from the trace;
+* ``fleet`` (``--fleet``) — tick rollup plus a per-cluster table (plan
+  wall, freshness lag, SLO hits/misses) from the fleet planner's
+  ``fleet.tick`` spans and the ``planner.plan`` / ``fleet.plan``
+  records nested under them.
 
 ``--validate`` schema-checks the records (exit 1 on problems) and
 ``--chrome OUT`` converts a JSONL trace for Perfetto / chrome://tracing.
@@ -126,6 +130,65 @@ def print_summary(records: list[dict], top: int) -> None:
             print(f"  {trig:20s} {int(invs[k])}")
 
 
+def fleet_table(records: list[dict]) -> tuple[dict, dict]:
+    """Per-cluster fleet stats from the trace alone: ``fleet.tick``
+    spans (tick cadence, dispatch counts, SLO cuts) plus the per-cluster
+    ``planner.plan`` spans and ``fleet.plan`` points the fleet planner
+    nests under them.  Returns (tick summary, per-cluster rows)."""
+    ticks = {"ticks": 0, "wall_us": 0.0, "rounds": 0, "chunks": 0,
+             "slo_expired": 0}
+    per: dict[str, dict] = defaultdict(lambda: {
+        "plans": 0, "moves": 0, "wall_us": 0.0,
+        "freshness_s": 0.0, "slo_hits": 0, "slo_misses": 0,
+        "converged": False})
+    for r in records:
+        args = r.get("args", {})
+        if r.get("ev") == "span" and r.get("name") == "fleet.tick":
+            ticks["ticks"] += 1
+            ticks["wall_us"] += r.get("dur") or 0.0
+            ticks["rounds"] += args.get("rounds", 0)
+            ticks["chunks"] += args.get("chunks", 0)
+            ticks["slo_expired"] += int(bool(args.get("slo_expired")))
+        elif (r.get("ev") == "span" and r.get("name") == "planner.plan"
+                and args.get("planner") == "fleet"):
+            row = per[str(args.get("cluster", "?"))]
+            row["plans"] += 1
+            row["moves"] += args.get("moves", 0)
+            row["wall_us"] += r.get("dur") or 0.0
+        elif r.get("ev") == "point" and r.get("name") == "fleet.plan":
+            row = per[str(args.get("cluster", "?"))]
+            row["freshness_s"] += args.get("freshness", 0.0)
+            if args.get("slo_expired"):
+                row["slo_misses"] += 1
+            else:
+                row["slo_hits"] += 1
+            row["converged"] = bool(args.get("converged"))
+    return ticks, dict(per)
+
+
+def print_fleet(records: list[dict]) -> None:
+    ticks, per = fleet_table(records)
+    print("== fleet ticks ==")
+    print(f"ticks                 {ticks['ticks']}")
+    print(f"tick wall             {_fmt_s(ticks['wall_us'])}")
+    print(f"bucket rounds         {ticks['rounds']} "
+          f"({ticks['chunks']} vmapped chunk dispatches)")
+    print(f"SLO-expired ticks     {ticks['slo_expired']}")
+    if not per:
+        print("no per-cluster fleet.plan records")
+        return
+    print("\n== per cluster ==")
+    print(f"{'cluster':24s} {'plans':>6s} {'moves':>7s} {'plan wall':>10s} "
+          f"{'freshness':>10s} {'slo hit/miss':>12s} {'conv':>5s}")
+    for key in sorted(per):
+        row = per[key]
+        fresh = row["freshness_s"] / max(row["plans"], 1)
+        print(f"{key:24s} {row['plans']:6d} {row['moves']:7d} "
+              f"{_fmt_s(row['wall_us']):>10s} {fresh:9.3f}s "
+              f"{row['slo_hits']:6d}/{row['slo_misses']:<5d} "
+              f"{'yes' if row['converged'] else 'no':>5s}")
+
+
 def print_bench_rows(records: list[dict]) -> None:
     """Recompute each bench.call row from its counter deltas alone."""
     print("== bench rows (from trace) ==")
@@ -152,6 +215,9 @@ def main() -> int:
                     help="schema-check the trace; exit 1 on problems")
     ap.add_argument("--bench", action="store_true",
                     help="recompute bench.call derived rows from the trace")
+    ap.add_argument("--fleet", action="store_true",
+                    help="per-cluster fleet table (plan wall, freshness "
+                         "lag, SLO hits/misses) from fleet.tick spans")
     ap.add_argument("--chrome", metavar="OUT", default=None,
                     help="write the Chrome/Perfetto conversion and exit")
     ap.add_argument("--top", type=int, default=12,
@@ -172,6 +238,9 @@ def main() -> int:
         print(f"wrote {args.chrome}")
         return 0
     print_summary(records, args.top)
+    if args.fleet:
+        print()
+        print_fleet(records)
     if args.bench:
         print()
         print_bench_rows(records)
