@@ -38,6 +38,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -46,6 +49,7 @@ from benchmarks.run import git_sha
 from repro import obs
 from repro.core import EquilibriumConfig, create_planner
 from repro.core.clustergen import cluster_b
+from repro.core.equilibrium_batch import DONATED_CARRY
 from repro.core.equilibrium_jax import DenseState, _jax_select
 
 import jax.numpy as jnp
@@ -192,9 +196,17 @@ def _tail_derived(stats: dict) -> str:
     slots = sum(int(t) * c for t, c in hist.items())
     rate = hits / slots if slots > 0 else 0.0
     syncs = stats.get("host_syncs", 0)
+    # carry-donation + dispatch-pipelining provenance: rows record the
+    # engine build they measured, so regressions in either are visible
+    # from the bench file alone (batch engines only — the seed/legacy
+    # paths have no chunk carry to donate)
+    extra = ""
+    if str(stats.get("engine", "")).startswith("batch"):
+        extra = (f";donated_carry={DONATED_CARRY};"
+                 f"pipeline={stats.get('pipeline', 0)}")
     return (f";tail_moves={tail}/{total};tail_time_share={share:.2f};"
             f"bound_hits={hits};pruned_sources={pruned};"
-            f"prune_rate={rate:.2f};syncs={syncs};tried_hist={full}")
+            f"prune_rate={rate:.2f};syncs={syncs};tried_hist={full}{extra}")
 
 
 def bench_cluster(initial, tag: str, cap: int, warm: int) -> list[dict]:
@@ -281,6 +293,63 @@ def bench_tail(initial, tag: str, warm: int) -> list[dict]:
     return rows
 
 
+def bench_shards(devices, scale: int, budget: int, cache: str | None,
+                 trace_dir: str | None = None) -> list[dict]:
+    """Sharded-planner profile rows, one subprocess per mesh size.
+
+    JAX fixes the host device count at process start, so each mesh point
+    spawns ``tools/shard_profile.py`` under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` and the rows
+    are stitched from the workers' JSON lines.  The N=1 point anchors
+    ``peak_ratio_vs_n1`` — the per-device peak memory of the compiled
+    chunk program, whose ~1/N scaling is the scale-out claim.  The
+    cluster build is pickle-cached and shared across mesh sizes."""
+    sha = git_sha()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows, base_peak = [], None
+    for n in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
+                            + env.get("XLA_FLAGS", "")).strip()
+        env.pop("PYTHONPATH", None)
+        cmd = [sys.executable,
+               os.path.join(repo, "tools", "shard_profile.py"),
+               "--devices", str(n), "--scale", str(scale),
+               "--budget", str(budget)]
+        if cache:
+            cmd += ["--cache", cache]
+        if trace_dir:
+            os.makedirs(trace_dir, exist_ok=True)
+            cmd += ["--trace-out",
+                    os.path.join(trace_dir, f"shard_n{n}.jsonl")]
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              env=env, cwd=repo)
+        if proc.returncode != 0:
+            raise RuntimeError(f"shard_profile --devices {n} failed:\n"
+                               f"{proc.stderr[-4000:]}")
+        res = json.loads(proc.stdout.strip().splitlines()[-1])
+        peak = int(res["peak_bytes_per_device"])
+        if base_peak is None:
+            base_peak = max(peak, 1)
+        mps = res.get("moves_per_s", 0.0)
+        print(f"  shard.B{scale}x.n{n}: {res['osds']} OSDs, peak/device "
+              f"{peak / 1e6:.2f} MB ({peak / base_peak:.2f}x of n1), "
+              f"{mps} moves/s, identical={res.get('identical', 'n/a')}")
+        rows.append({
+            "name": f"planner.shard.B{scale}x.n{n}",
+            "us_per_call": 1e6 / max(mps, 1e-9),
+            "derived": (f"peak_bytes_per_device={peak};"
+                        f"peak_ratio_vs_n1={peak / base_peak:.2f};"
+                        f"devices={n};osds={res['osds']};"
+                        f"pgs={res['pgs']};moves_per_s={mps};"
+                        f"identical={res.get('identical', 'n/a')};"
+                        f"donated_carry={res['donated_carry']};"
+                        f"pipeline={res.get('pipeline', 0)}"),
+            "git_sha": sha,
+        })
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -289,7 +358,33 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None,
                     help="keep the bench trace (*.jsonl native, otherwise "
                          "Chrome/Perfetto JSON); default: in-memory only")
+    ap.add_argument("--shards-only", action="store_true",
+                    help="emit only the planner.shard.* mesh-scaling rows")
+    ap.add_argument("--shard-scale", type=int, default=8,
+                    help="cluster_b scale for shard rows (8 = ~8k OSDs)")
+    ap.add_argument("--shard-devices", default="1,2,4",
+                    help="comma-separated mesh sizes to profile")
+    ap.add_argument("--shard-budget", type=int, default=64,
+                    help="timed-plan move window per mesh point")
+    ap.add_argument("--shard-cache", default=None,
+                    help="cluster pickle cache shared across mesh points "
+                         "(default .cache/cluster_b_x{scale}.pkl)")
+    ap.add_argument("--shard-trace-dir", default=None,
+                    help="keep per-worker shard traces here (feeds "
+                         "tools/tracestat.py --shards)")
     args = ap.parse_args()
+
+    shard_devices = [int(x) for x in args.shard_devices.split(",") if x]
+    shard_cache = args.shard_cache or os.path.join(
+        ".cache", f"cluster_b_x{args.shard_scale}.pkl")
+    if args.shards_only:
+        rows = bench_shards(shard_devices, args.shard_scale,
+                            args.shard_budget, shard_cache,
+                            args.shard_trace_dir)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} rows -> {args.out}")
+        return
 
     cap = 120 if args.quick else 400
     warm = 16 if args.quick else 32
@@ -312,6 +407,12 @@ def main() -> None:
     if args.quick:
         from repro.core.clustergen import cluster_f
         rows += bench_tail(cluster_f(), "F", warm=warm)
+    else:
+        # mesh-scaling profile at the 10k-OSD-scale cluster: subprocesses
+        # (device count is per-process), so outside the bench trace
+        rows += bench_shards(shard_devices, args.shard_scale,
+                             args.shard_budget, shard_cache,
+                             args.shard_trace_dir)
     if started:
         obs.stop_tracing()
         if args.trace_out:

@@ -15,10 +15,12 @@ ap.add_argument("--cluster", choices=sorted(PAPER_CLUSTERS), default="A")
 ap.add_argument("--max-moves", type=int, default=10_000)
 ap.add_argument("--engine", default="equilibrium",
                 choices=("equilibrium", "equilibrium_batch",
+                         "equilibrium_batch_sharded",
                          "equilibrium_jax_legacy"),
                 help="Equilibrium planner: dense-NumPy (default), the "
-                     "device-resident batched engine, or the per-source "
-                     "legacy JAX path — all bit-identical")
+                     "device-resident batched engine, its shard_map-ped "
+                     "mesh variant, or the per-source legacy JAX path — "
+                     "all bit-identical")
 ap.add_argument("--trajectory-csv", default=None)
 args = ap.parse_args()
 

@@ -636,21 +636,39 @@ def _plan_chunk_impl(dyn, const, slack, headroom, min_dvar, n_real, k_eff,
     return dyn, done, overflow, tel, moves
 
 
+#: The chunk carry is donated to the jit call (``donate_argnums``): the
+#: previous chunk's output buffers are reused in place instead of copied
+#: per dispatch.  Structural (not a knob) — exported so benchmarks can
+#: record the variant honestly in derived fields.
+DONATED_CARRY = True
+
+
 @partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached",
-                                   "bounds", "telemetry"))
+                                   "bounds", "telemetry"),
+         donate_argnums=(0,))
 def _plan_chunk(dyn, const, slack, headroom, min_dvar, *,
                 k, kb, rb, m, backend, cached, bounds, telemetry=False):
     """Single-cluster jitted entry over :func:`_plan_chunk_impl` — the
     degenerate fleet of one: no shape padding (``n_real = n_dev``,
     ``k_eff = k``) and an always-active lane.  Kept as the planner's
     call target so the fleet factoring cannot perturb the single-cluster
-    sequence (the extra scalars fold to the constants they replaced)."""
+    sequence (the extra scalars fold to the constants they replaced).
+
+    The ``dyn`` carry is donated — every element of the output carry
+    matches a donated input buffer in shape and dtype, so XLA updates the
+    carry in place and the per-chunk buffer copies disappear.  Callers
+    must treat the passed-in carry as consumed (the planner always
+    rebinds ``self._dyn`` to the returned one).  The trailing
+    ``max(nrows)`` output replaces the host's post-hoc fetch of the whole
+    ``nrows`` vector for the re-pad check, keeping the per-chunk sync
+    payload O(chunk) — and free of references into the donated carry."""
     n_dev = const[0].shape[0]
-    return _plan_chunk_impl(
+    dyn, done, overflow, tel, moves = _plan_chunk_impl(
         dyn, const, slack, headroom, min_dvar,
         jnp.asarray(float(n_dev), jnp.float64), jnp.int32(k),
         jnp.bool_(True), k=k, kb=kb, rb=rb, m=m, backend=backend,
         cached=cached, bounds=bounds, telemetry=telemetry)
+    return dyn, done, overflow, tel, moves, jnp.max(dyn[8])
 
 
 # ---------------------------------------------------------------------------
@@ -721,13 +739,18 @@ class BatchPlanner:
                  row_capacity: int | None = None,
                  select_backend: str = "auto",
                  legality_cache: bool = False,
-                 source_bounds: bool = True):
+                 source_bounds: bool = True,
+                 pipeline: bool = True):
         self.state = state
         self.cfg = cfg or EquilibriumConfig()
         self.chunk = chunk
         self.row_capacity = row_capacity
         self.legality_cache = legality_cache
         self.source_bounds = source_bounds
+        # pipelined dispatch: overlap chunk i+1's device work with chunk
+        # i's host-side processing (pure scheduling — the dispatch gate in
+        # _chunk_loop keeps the emitted sequence bit-identical)
+        self.pipeline = pipeline
         if select_backend == "auto":
             select_backend = ("pallas-tpu" if jax.default_backend() == "tpu"
                               else "ref")
@@ -1192,6 +1215,11 @@ class BatchPlanner:
         dense.sh_size = sh_size          # Movement sizes read from here
         dense.ideal = ideal
         dense.pool_counts = pool_counts
+        # this is a *partial* refresh — only the fields the device carry
+        # and _reconcile read; membership/occupancy/row-set mirrors stay
+        # at the pre-delta epoch, so the dense engine must refuse to warm
+        # start from this object (DenseState.require_fresh)
+        dense.mirror_complete = False
 
         self._const = dev_const + shard_const + (jnp.asarray(ideal),)
         self._dyn = (
@@ -1250,6 +1278,7 @@ class BatchPlanner:
         tail_flush(acc)
         stats_out["legality_cache"] = self.legality_cache
         stats_out["source_bounds"] = self.source_bounds
+        stats_out["pipeline"] = self.pipeline
         self._registry_stats(snap, stats_out)
 
     def _reconcile(self, raw_moves, record_trajectory: bool,
@@ -1303,18 +1332,53 @@ class BatchPlanner:
         stats_out["cache_misses"] = int(d.get("batch.cache_misses", 0))
         stats_out["absorbed_deltas"] = self._absorbed_deltas
 
+    def _dispatch_chunk(self, telemetry: bool):
+        """Async-dispatch one chunk against the current carry (donating
+        the previous carry buffers to the jit) and rebind ``self._dyn``
+        to the returned one; the small per-chunk results come back as
+        *unfetched* handles so the caller chooses when to block.  The
+        sharded engine overrides this with the mesh dispatch."""
+        jit0 = _plan_chunk._cache_size()
+        self._dyn, done, overflow, tel, moves, nmax = _plan_chunk(
+            self._dyn, self._const, self._slack, self._headroom,
+            self._min_dvar, k=self._k, kb=self._kb, rb=self._rb,
+            m=self.chunk, backend=self.select_backend,
+            cached=self.legality_cache, bounds=self.source_bounds,
+            telemetry=telemetry)
+        recompiles = _plan_chunk._cache_size() - jit0
+        if recompiles:
+            _obs_registry().inc("batch.jit_recompiles", recompiles)
+        return (moves, done, overflow, tel, nmax), recompiles
+
+    def _record_chunk_tel(self, reg, tel_np) -> None:
+        """Fold one fetched device-telemetry vector into the registry
+        (the sharded engine overrides this to keep per-shard counters)."""
+        reg.inc("batch.tiles_walked", int(tel_np[0]))
+        reg.inc("batch.cand_tiles", int(tel_np[1]))
+        if self.legality_cache:
+            reg.inc("batch.cache_hits", int(tel_np[2]))
+            reg.inc("batch.cache_misses", int(tel_np[3]))
+
     def _chunk_loop(self, budget: int
                     ) -> list[tuple[int, int, int, int, int, float]]:
         """Run chunks until ``budget`` raw moves are on hand (stashing any
         overshoot), the device reports convergence, or a re-pad is needed.
         ``self._terminal_seconds`` collects the wall time of chunks that
-        emit no moves (the terminal every-source-fruitless scan)."""
+        emit no moves (the terminal every-source-fruitless scan).
+
+        With ``pipeline`` on (the default), chunk *i+1* is async-dispatched
+        as soon as chunk *i*'s fetched scalars prove another full chunk is
+        needed (not done, not overflowing, budget and row capacity both
+        leave room) — so the device computes chunk *i+1* while the host
+        drains chunk *i*'s moves.  The gate means a pipelined dispatch is
+        never wasted or semantically new: it is exactly the dispatch the
+        next loop iteration would have issued, moved before the host-side
+        processing.  The emitted sequence is untouched (property-tested)."""
         self._terminal_seconds = 0.0
         raw: list[tuple[int, int, int, int, int, float]] = []
         take = min(len(self._stash), budget)
         raw.extend(self._stash[:take])
         del self._stash[:take]
-        state = self.state
         reg = _obs_registry()
         if take:
             reg.inc("batch.stash_replayed", take)
@@ -1323,37 +1387,47 @@ class BatchPlanner:
         # like any other); the disabled variant is the exact pre-obs
         # computation, keeping plan bit-identity trivially
         telemetry = _obs.enabled()
+        pending = None      # (handles, recompiles, dispatch_s) of chunk i+1
         while len(raw) < budget and not self._done:
             with _obs.span("batch.chunk", cat="batch") as sp:
                 t0 = time.perf_counter()
-                jit0 = _plan_chunk._cache_size()
-                self._dyn, done, overflow, tel, moves = _plan_chunk(
-                    self._dyn, self._const, self._slack, self._headroom,
-                    self._min_dvar, k=self._k, kb=self._kb, rb=self._rb,
-                    m=self.chunk, backend=self.select_backend,
-                    cached=self.legality_cache, bounds=self.source_bounds,
-                    telemetry=telemetry)
-                moves_np, done, overflow, tel_np, nrows_np = _fetch(
-                    (moves, done, overflow, tel, self._dyn[8]))
+                if pending is None:
+                    handles, recompiles = self._dispatch_chunk(telemetry)
+                    dispatch_s = time.perf_counter() - t0
+                    overlapped = False
+                else:
+                    handles, recompiles, dispatch_s = pending
+                    pending = None
+                    overlapped = True
+                t1 = time.perf_counter()
+                moves_np, done, overflow, tel_np, nmax = _fetch(handles)
                 dt = time.perf_counter() - t0
-                recompiles = _plan_chunk._cache_size() - jit0
-                if recompiles:
-                    reg.inc("batch.jit_recompiles", recompiles)
+                sync_s = time.perf_counter() - t1
+                done, overflow, nmax = bool(done), bool(overflow), int(nmax)
                 emitted = moves_np[moves_np[:, 0] >= 0]
+                if (self.pipeline and not done and not overflow
+                        and len(raw) + len(emitted) < budget
+                        and nmax + self.chunk <= self._r_cap):
+                    # every break / re-pad condition below is excluded, so
+                    # the next loop iteration will run a full chunk: issue
+                    # its dispatch now and let the device overlap it with
+                    # the host-side processing of this one
+                    td = time.perf_counter()
+                    pending = (*self._dispatch_chunk(telemetry),
+                               time.perf_counter() - td)
+                    reg.inc("batch.chunks_overlapped")
                 if telemetry:
-                    reg.inc("batch.tiles_walked", int(tel_np[0]))
-                    reg.inc("batch.cand_tiles", int(tel_np[1]))
-                    if self.legality_cache:
-                        reg.inc("batch.cache_hits", int(tel_np[2]))
-                        reg.inc("batch.cache_misses", int(tel_np[3]))
+                    self._record_chunk_tel(reg, tel_np)
                 if self.legality_cache:
                     # a clean cache survives every applied move only
                     # because apply_move column-repairs it in place —
                     # one repair per emitted move (host-side knowledge,
                     # needs no device counter)
                     reg.inc("batch.cache_repairs", len(emitted))
-                sp.set(emitted=len(emitted), done=bool(done),
-                       overflow=bool(overflow), recompiles=recompiles)
+                sp.set(emitted=len(emitted), done=done, overflow=overflow,
+                       recompiles=recompiles, overlapped=overlapped,
+                       dispatch_s=round(dispatch_s, 6),
+                       sync_s=round(sync_s, 6))
             if len(emitted) == 0 and done and not overflow:
                 self._terminal_seconds += dt    # the fruitless final scan
                                                 # (not an overflow re-pad)
@@ -1376,24 +1450,30 @@ class BatchPlanner:
             if done:
                 self._done = True
                 break
-            if overflow or int(nrows_np.max()) + self.chunk > self._r_cap:
+            if overflow or nmax + self.chunk > self._r_cap:
                 # re-pad the per-device row table and resume (one extra
                 # sync; triggers one recompile for the new row_capacity);
                 # the legality cache is shape-bound to r_cap, so it
                 # restarts cold — the source bounds are not (their
                 # certificates say nothing about row geometry) and
-                # survive the re-pad
+                # survive the re-pad.  The pipeline gate above excludes
+                # both re-pad triggers, so no dispatched chunk is in
+                # flight against the stale geometry.  Sized from the
+                # carry's own width, which for the sharded engine is the
+                # mesh-padded device axis, not ``state.n_devices``.
                 reg.inc("batch.repads")
                 _obs.point("batch.repad", cat="batch",
                            r_cap=self._r_cap)
-                rows_np = _fetch(self._dyn[7])
-                self._r_cap = self._round_cap(int(nrows_np.max()) + self.chunk)
-                packed = np.full((state.n_devices, self._r_cap), -1, np.int32)
-                for d in range(state.n_devices):
+                rows_np, nrows_np = _fetch((self._dyn[7], self._dyn[8]))
+                n_carry = rows_np.shape[0]
+                self._r_cap = self._round_cap(int(nrows_np.max())
+                                              + self.chunk)
+                packed = np.full((n_carry, self._r_cap), -1, np.int32)
+                for d in range(n_carry):
                     nd = int(nrows_np[d])
                     packed[d, :nd] = rows_np[d, :nd]
                 self._dyn = self._dyn[:7] + (jnp.asarray(packed),) \
-                    + self._dyn[8:10] + self._fresh_cache(state.n_devices) \
+                    + self._dyn[8:10] + self._fresh_cache(n_carry) \
                     + (self._dyn[13],)
         return raw
 
@@ -1423,6 +1503,7 @@ class BatchPlanner:
                     tail_flush(tail_stats(stats_out))
                     stats_out["legality_cache"] = self.legality_cache
                     stats_out["source_bounds"] = self.source_bounds
+                    stats_out["pipeline"] = self.pipeline
                     self._registry_stats(snap, stats_out)
                 return [], []
             raw_moves = self._chunk_loop(budget)

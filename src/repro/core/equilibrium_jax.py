@@ -76,6 +76,14 @@ class DenseState:
 
     def __init__(self, state: ClusterState):
         self.state = state
+        # freshness contract: the mirror is bit-faithful to the state at
+        # exactly this mutation epoch.  ``apply_row`` callers re-stamp via
+        # ``mark_synced`` after applying the movement to the state; any
+        # other mutation (or a partial refresh like the batch engine's
+        # delta absorption, which leaves the membership/occupancy arrays
+        # untouched) makes ``require_fresh`` refuse warm reuse.
+        self.epoch = state.mutation_epoch
+        self.mirror_complete = True
         devs = state.devices
         n_dev = len(devs)
         self.n_dev = n_dev
@@ -186,6 +194,45 @@ class DenseState:
         self.util = self.used / self.cap
         self.util_sum = float(self.util.sum())
         self.util_sumsq = float((self.util ** 2).sum())
+
+    # -- freshness ----------------------------------------------------------
+
+    @property
+    def stale(self) -> bool:
+        """True when the bound state mutated past the mirrored epoch (or
+        a partial refresh left the mirror structurally incomplete)."""
+        return (not self.mirror_complete
+                or self.epoch != self.state.mutation_epoch)
+
+    def mark_synced(self) -> None:
+        """Re-stamp the mirror as faithful to the state's current epoch —
+        legal only right after the mirror and the state absorbed the same
+        mutation (``apply_row`` + ``ClusterState.apply`` of one move)."""
+        self.epoch = self.state.mutation_epoch
+
+    def require_fresh(self, state: ClusterState) -> None:
+        """Refuse a warm start on a stale or foreign mirror.
+
+        The dense engine's planning math reads the *full* mirror
+        (membership, domain occupancy, per-device row sets); planning on
+        arrays that missed a mutation silently emits illegal or
+        non-faithful moves, so a mismatched epoch is an error, never a
+        fallback.
+        """
+        if state is not self.state:
+            raise ValueError("DenseState warm start bound to a different "
+                             "ClusterState than it mirrors")
+        if not self.mirror_complete:
+            raise RuntimeError(
+                "DenseState mirror is structurally incomplete (a partial "
+                "refresh such as batch delta absorption only updates the "
+                "fields the device carry needs); rebuild before warm "
+                "starting the dense engine")
+        if self.epoch != self.state.mutation_epoch:
+            raise RuntimeError(
+                f"DenseState mirror is stale (mirrored epoch {self.epoch}, "
+                f"state epoch {self.state.mutation_epoch}); rebuild it or "
+                "absorb the missed mutations before warm starting")
 
     # -- mutation -----------------------------------------------------------
 
@@ -381,7 +428,8 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
                   record_trajectory: bool = False, use_jax: bool = False,
                   pad_rows: int = 256, record_free_space: bool = True,
                   engine: str | None = None, stats_out: dict | None = None,
-                  source_bounds: bool = False):
+                  source_bounds: bool = False,
+                  dense: "DenseState | None" = None):
     """Drop-in replacement for :func:`repro.core.equilibrium.balance` with
     identical outputs (move-for-move) and 1–3 orders of magnitude less
     planning time on paper-scale clusters.  Library-internal engine entry;
@@ -423,7 +471,13 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
 
     from .tail import (SourceBounds, tail_flush, tail_record, tail_stats,
                        tail_terminal)
-    dense = DenseState(state)
+    # warm start (``dense`` kept from a prior call): accepted only when
+    # the mirror provably matches the state — a stale mirror raises
+    # instead of silently planning on arrays that missed a mutation
+    if dense is None:
+        dense = DenseState(state)
+    else:
+        dense.require_fresh(state)
     bounds = SourceBounds() if source_bounds else None
     movements: list[Movement] = []
     records: list[MoveRecord] = []
@@ -483,6 +537,7 @@ def _balance_fast(state: ClusterState, cfg: EquilibriumConfig | None = None,
             used_before = float(dense.used[s_pre])
         mv = dense.apply_row(row, dst_idx)
         state.apply(mv)
+        dense.mark_synced()      # mirror and state absorbed the same move
         if bounds is not None:
             holders = np.flatnonzero(dense.member[pgi]).tolist() + [s_pre]
             counts = dense.pool_counts[pool_i]

@@ -254,3 +254,86 @@ def count_flip_enables(dst_ok_before, dst_ok_after):
     the one count event that can break a no-candidate certificate for
     sources still holding shards of that pool."""
     return dst_ok_after & ~dst_ok_before
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard reductions (PR 9)
+#
+# The sharded batch engine (core/shard.py) splits the destination axis of
+# the legality tiles into contiguous ascending device blocks, one per mesh
+# shard: shard ``s`` owns global devices ``[s*w, (s+1)*w)``.  Everything
+# bitwise-critical about recombining per-shard partial results lives here,
+# next to the serial expressions it must agree with:
+#
+# * the winner rule — the serial engine's masked select is a
+#   first-occurrence argmin of utilization over legal destinations, i.e.
+#   the lexicographic minimum of (util, device index).  Each shard selects
+#   locally (first-occurrence argmin within its block, so the local winner
+#   already carries the lowest in-block index), and the shard winners are
+#   folded with :func:`shard_winner_better`.  Because the blocks are
+#   contiguous and ascending, a cross-shard utilization tie resolves to
+#   the lower shard — exactly the serial argmin's lowest-global-index
+#   tie-break (property-tested in tests/test_shard.py);
+# * owner gathers — per-device carry rows (row tables, certificates,
+#   ``dst_ok`` columns) live only on their owner shard; a value at a
+#   *global* device index is reconstructed with a one-owner ``psum``
+#   (:func:`shard_gather_contrib` / :func:`shard_gather_finish`), which is
+#   exact for the int/bool payloads it is used on;
+# * the no-candidate certificate predicate — a source is prunable only
+#   when *no shard anywhere* holds a candidate, so the per-tile
+#   any-candidate bit is the psum-OR of the local bits (an int psum of the
+#   bools compared against zero; engines only combine through these
+#   helpers, never with ad-hoc collectives).
+#
+# Like everything above, these are written against operators NumPy and
+# jax.numpy share; the engine supplies the collectives (``lax.psum`` /
+# ``lax.all_gather``) and these functions supply the combine math.
+
+
+def shard_owns(dev_index, shard_base, shard_width):
+    """Does this shard own global device ``dev_index``?  Shards hold
+    contiguous ascending blocks, so ownership is a half-open interval
+    test — the mask every owner gather and owner-local scatter keys on
+    (non-owned scatter targets map to the one-past-the-end drop
+    sentinel)."""
+    return (dev_index >= shard_base) & (dev_index < shard_base + shard_width)
+
+
+def shard_gather_contrib(values, owns, neutral=0):
+    """One shard's addend for a psum-reconstructed gather: exactly one
+    shard owns each requested device, so summing ``owns * (value -
+    neutral)`` across shards yields ``value - neutral`` — shifted by
+    ``neutral`` so a padding payload (e.g. ``-1`` row sentinels)
+    contributes zero from non-owners.  Exact for the int32/bool payloads
+    the engine gathers (no float rounding enters the reduction)."""
+    return (values - neutral) * owns
+
+
+def shard_gather_finish(summed, neutral=0):
+    """Undo :func:`shard_gather_contrib`'s neutral shift after the psum:
+    ``psum(contrib) + neutral`` is the owner's value."""
+    return summed + neutral
+
+
+def shard_any(summed_any):
+    """Global any-candidate bit from the psum of per-shard local bits
+    (cast to int by the engine): the certificate predicate must see every
+    shard's candidates — a source fruitless on this shard may hold a
+    candidate on another, and pruning it would diverge from the serial
+    walk."""
+    return summed_any > 0
+
+
+def shard_winner_better(any_new, util_new, dst_new, any_best, util_best,
+                        dst_best):
+    """Does shard-new's local winner beat the incumbent in the global
+    emptiest-first order?  The full lexicographic (util asc, global device
+    index asc) comparison — the same total order the serial
+    first-occurrence argmin minimizes.  Folding shards in ascending order
+    with this predicate reproduces the serial winner bit-for-bit: a
+    strict utilization win replaces the incumbent, a tie falls to the
+    index term, and with contiguous ascending blocks a later shard's
+    indices are all larger, so ties keep the earlier shard — the serial
+    tie-break."""
+    return any_new & (~any_best | (util_new < util_best)
+                      | ((util_new == util_best) & (dst_new < dst_best)))

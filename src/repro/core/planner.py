@@ -148,6 +148,7 @@ _REGISTRY: dict[str, PlannerSpec] = {}
 #: fills the registry slot.
 _LAZY_PLANNERS: dict[str, str] = {
     "fleet": "repro.fleet.planner",
+    "equilibrium_batch_sharded": "repro.core.shard",
 }
 
 
@@ -334,12 +335,14 @@ class BatchEquilibriumPlanner:
     """
 
     name = "equilibrium_batch"
+    engine = "batch"                     # PlanResult.stats["engine"]
 
     def __init__(self, cfg: EquilibriumConfig | None = None, chunk: int = 64,
                  source_block: int = 1, row_block: int = 8,
                  row_capacity: int | None = None,
                  select_backend: str = "auto", warm: bool = True,
-                 legality_cache: bool = False, source_bounds: bool = True):
+                 legality_cache: bool = False, source_bounds: bool = True,
+                 pipeline: bool = True):
         self.cfg = cfg or EquilibriumConfig()
         self.warm = warm
         self._engine_kwargs = dict(chunk=chunk, source_block=source_block,
@@ -347,7 +350,8 @@ class BatchEquilibriumPlanner:
                                    row_capacity=row_capacity,
                                    select_backend=select_backend,
                                    legality_cache=legality_cache,
-                                   source_bounds=source_bounds)
+                                   source_bounds=source_bounds,
+                                   pipeline=pipeline)
         self._impl = None                # BatchPlanner, bound lazily
         self._fallback = None            # numpy planner when JAX is absent
 
@@ -382,7 +386,7 @@ class BatchEquilibriumPlanner:
                                        stats_out=aux)
             return _finish(PlanResult(moves, records, self.name, stats={
                 "planning_seconds": time.perf_counter() - t0,
-                "budget": budget, "engine": "batch", "warm": self.warm,
+                "budget": budget, "engine": self.engine, "warm": self.warm,
                 **aux}), sp)
 
     def observe(self, delta: ClusterDelta) -> bool:

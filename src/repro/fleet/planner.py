@@ -59,14 +59,20 @@ _UNSET = object()
 
 
 @partial(jax.jit, static_argnames=("k", "kb", "rb", "m", "backend", "cached",
-                                   "bounds", "telemetry"))
+                                   "bounds", "telemetry"),
+         donate_argnums=(0,))
 def _plan_fleet_chunk(dyn, const, slack, headroom, min_dvar, n_real, k_eff,
                       active0, *, k, kb, rb, m, backend, cached, bounds,
                       telemetry=False):
     """The fleet chunk step: ``_plan_chunk_impl`` vmapped over a leading
     cluster axis.  Every argument is stacked (scalars become per-lane
     vectors); the static tile geometry is the bucket's.  One compiled
-    program per (bucket shape, lane count)."""
+    program per (bucket shape, lane count).
+
+    The stacked carry is donated (like the single-cluster
+    ``_plan_chunk``): the bucket always rebinds ``bucket.dyn`` to the
+    returned carry, so the previous round's buffers are update-in-place
+    fodder rather than copies."""
     impl = partial(_plan_chunk_impl, k=k, kb=kb, rb=rb, m=m, backend=backend,
                    cached=cached, bounds=bounds, telemetry=telemetry)
     dyn, done, overflow, tel, moves = jax.vmap(impl)(
@@ -312,14 +318,23 @@ class FleetPlanner:
                                 if key in packed
                                 and self._pack.where.get(key) == (shape, i)])
                               for shape, bucket in self._pack.buckets.items()]
+                # phase 1 — co-scheduled dispatch: every bucket with live
+                # lanes goes out asynchronously before the round's single
+                # host sync, so the device works all shapes concurrently
+                # instead of idling while the host blocks per bucket.
+                # Buckets are disjoint key sets, so no result of one can
+                # change another's dispatch; the per-lane streams stay
+                # bit-identical to the sequential rounds.
+                pending = []
                 for shape, bucket, members in groups:
                     active = [(key, i) for key, i in members if key in live]
                     if not active:
                         continue
                     if (not first_dispatch and deadline is not None
                             and time.perf_counter() > deadline):
-                        # SLO cut: everything fetched so far is a valid
-                        # partial plan; unfetched work stays in the carry
+                        # SLO cut before committing more work; whatever
+                        # is already in flight below still gets fetched
+                        # (it is applied in the carries either way)
                         expired = True
                         break
                     first_dispatch = False
@@ -337,12 +352,25 @@ class FleetPlanner:
                             k=shape.k, kb=1, rb=self.rb, m=self.chunk,
                             backend="ref", cached=False,
                             bounds=self.source_bounds, telemetry=telemetry)
-                    moves_np, done_np, ovf_np, tel_np, nmax_np = _fetch(
-                        (moves, done, overflow, tel, nmax))
-                    dt = time.perf_counter() - t0
                     recompiles = _plan_fleet_chunk._cache_size() - jit0
                     if recompiles:
                         reg.inc("fleet.jit_recompiles", recompiles)
+                    pending.append((shape, bucket, active,
+                                    (moves, done, overflow, tel, nmax), t0))
+                if not pending:
+                    continue
+                reg.inc("fleet.rounds")
+                if len(pending) > 1:
+                    reg.inc("fleet.rounds.overlapped")
+                # phase 2 — one blocking transfer for the whole round
+                # (CI-gated: fleet.round_syncs stays equal to fleet.rounds
+                # no matter how many bucket shapes are in play)
+                fetched = _fetch([p[3] for p in pending])
+                reg.inc("fleet.round_syncs")
+                for (shape, bucket, active, _handles, t0), \
+                        (moves_np, done_np, ovf_np, tel_np, nmax_np) \
+                        in zip(pending, fetched):
+                    dt = time.perf_counter() - t0
                     chunks += 1
                     reg.inc("fleet.chunks")
                     lane_dt = dt / len(active)

@@ -25,7 +25,9 @@ Key groups:
 * batch-engine signals — :data:`HOST_SYNCS`, :data:`JIT_RECOMPILES`,
   :data:`STASH_MOVES`, :data:`REBUILDS`, :data:`ABSORBED_DELTAS`,
   :data:`WARM`, :data:`LEGALITY_CACHE`, :data:`CACHE_HITS`,
-  :data:`CACHE_MISSES` (0 / False on engines without the machinery);
+  :data:`CACHE_MISSES`, :data:`PIPELINE` (pipelined chunk dispatch
+  active) and :data:`SHARDS` (mesh size of the sharded engine; 0 when
+  planning unsharded) — 0 / False on engines without the machinery;
 * fleet-service signals (:mod:`repro.fleet`) — :data:`FLEET_CLUSTERS`
   (fleet size the plan was batched with; 0 outside a fleet tick),
   :data:`SLO_DEADLINE_SECONDS` / :data:`SLO_EXPIRED` (the latency-SLO
@@ -46,7 +48,8 @@ __all__ = [
     "SOURCES_TRIED_HIST", "TAIL_MOVES", "TAIL_SECONDS",
     "TERMINAL_SCAN_SECONDS", "SELECTION_SECONDS", "APPLY_SECONDS",
     "MOVES_SECONDS", "BOUND_HITS", "PRUNED_SOURCES", "SOURCE_BOUNDS",
-    "LEGALITY_CACHE", "CACHE_HITS", "CACHE_MISSES", "FLEET_CLUSTERS",
+    "LEGALITY_CACHE", "CACHE_HITS", "CACHE_MISSES", "PIPELINE",
+    "SHARDS", "FLEET_CLUSTERS",
     "SLO_DEADLINE_SECONDS", "SLO_EXPIRED", "PLAN_FRESHNESS_SECONDS",
     "CONVERGED", "VARIANCE_AFTER", "STATS_SCHEMA",
     "finalize_stats", "validate_stats", "validate_trace",
@@ -74,6 +77,8 @@ SOURCE_BOUNDS = "source_bounds"
 LEGALITY_CACHE = "legality_cache"
 CACHE_HITS = "cache_hits"
 CACHE_MISSES = "cache_misses"
+PIPELINE = "pipeline"
+SHARDS = "shards"
 FLEET_CLUSTERS = "fleet_clusters"
 SLO_DEADLINE_SECONDS = "slo_deadline_seconds"
 SLO_EXPIRED = "slo_expired"
@@ -106,6 +111,8 @@ STATS_SCHEMA: dict[str, tuple[tuple, object]] = {
     LEGALITY_CACHE: ((bool,), False),
     CACHE_HITS: ((int,), 0),
     CACHE_MISSES: ((int,), 0),
+    PIPELINE: ((bool,), False),
+    SHARDS: ((int,), 0),
     FLEET_CLUSTERS: ((int,), 0),
     SLO_DEADLINE_SECONDS: ((float, type(None)), None),
     SLO_EXPIRED: ((bool,), False),

@@ -120,3 +120,64 @@ def test_fast_is_faster_on_cluster_a():
     t0 = time.perf_counter(); balance_fast(cluster_a(), cfg)
     t_fast = time.perf_counter() - t0
     assert t_fast < t_faithful * 2.0, (t_fast, t_faithful)
+
+
+# ---------------------------------------------------------------------------
+# DenseState freshness contract (warm starts refuse stale mirrors)
+
+
+def test_dense_warm_start_matches_cold():
+    """A fresh mirror handed back in is a pure warm start: the continued
+    plan is identical to rebuilding the mirror from scratch."""
+    from repro.core.equilibrium_jax import _balance_fast
+    cfg = EquilibriumConfig(max_moves=10)
+    cold_state, warm_state = cluster_a(), cluster_a()
+    a1, _ = _balance_fast(cold_state, cfg)
+    dense = DenseState(warm_state)
+    b1, _ = _balance_fast(warm_state, cfg, dense=dense)
+    assert as_tuples(a1) == as_tuples(b1)
+    # the mirror tracked every applied move: it is still fresh, and a
+    # second warm continuation matches a cold plan on the mutated state
+    assert not dense.stale
+    a2, _ = _balance_fast(cold_state, cfg)
+    b2, _ = _balance_fast(warm_state, cfg, dense=dense)
+    assert as_tuples(a2) == as_tuples(b2)
+
+
+def test_dense_warm_start_refuses_stale_mirror():
+    from repro.core.equilibrium_jax import _balance_fast
+    state = cluster_a()
+    dense = DenseState(state)
+    pid = sorted(state.pools)[0]
+    state.grow_pool(pid, state.pools[pid].stored_bytes * 1.2)
+    assert dense.stale
+    with pytest.raises(RuntimeError, match="stale"):
+        _balance_fast(state, EquilibriumConfig(max_moves=5), dense=dense)
+
+
+def test_dense_warm_start_refuses_foreign_state():
+    from repro.core.equilibrium_jax import _balance_fast
+    dense = DenseState(cluster_a())
+    with pytest.raises(ValueError, match="different ClusterState"):
+        _balance_fast(cluster_a(), EquilibriumConfig(max_moves=5),
+                      dense=dense)
+
+
+def test_dense_refuses_batch_absorbed_mirror():
+    """The batch engine's delta absorption refreshes only the fields the
+    device carry needs; the dense engine must refuse that partial mirror
+    even though the planner considers itself synced."""
+    jax = pytest.importorskip("jax")
+    del jax
+    from repro.core.equilibrium_batch import BatchPlanner
+    from repro.core.equilibrium_jax import _balance_fast
+    state = cluster_a()
+    bp = BatchPlanner(state, EquilibriumConfig())
+    bp.plan(max_moves=5)
+    pid = sorted(state.pools)[0]
+    state.grow_pool(pid, state.pools[pid].stored_bytes * 1.2)
+    bp.plan(max_moves=5)                 # absorbs the growth delta
+    assert bp._dense is not None and not bp._dense.mirror_complete
+    with pytest.raises(RuntimeError, match="incomplete"):
+        _balance_fast(state, EquilibriumConfig(max_moves=5),
+                      dense=bp._dense)

@@ -143,6 +143,23 @@ def test_fleet_multi_bucket():
                          deltas=False)
 
 
+def test_fleet_rounds_coscheduled():
+    """A round dispatches every bucket before its single host sync: with
+    two shape buckets in play the overlapped-round counter ticks, and the
+    blocking-transfer count stays one per round regardless of how many
+    buckets dispatched."""
+    from repro.obs import registry
+    reg = registry()
+    snap = reg.snapshot()
+    _run_fleet_vs_serial([(9, 3), (18, 4)], ticks=2, budget=CH,
+                         deltas=False)
+    d = reg.deltas_since(snap)
+    rounds = int(d.get("fleet.rounds", 0))
+    assert rounds >= 1
+    assert int(d.get("fleet.round_syncs", 0)) == rounds
+    assert int(d.get("fleet.rounds.overlapped", 0)) >= 1
+
+
 def test_fleet_slo_cutoff_stream_identical():
     """An SLO cut mid-stream (deadline 0 on tick 1) may shrink that
     tick's plans but the concatenated per-cluster streams stay

@@ -1,0 +1,154 @@
+"""The shard_map-ped batch engine must be *bit-identical* to the serial
+``equilibrium_batch`` engine — same moves, same variance trajectories,
+same sources-tried — at every mesh size, with even and uneven device-axis
+padding, with and without source bounds, and across warm restarts through
+delta absorption.  Mesh sizes other than 1 need a forced host platform
+(JAX fixes the device count at process start), so those run
+``tools/shard_check.py`` in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (Device, EquilibriumConfig, PlacementRule, Pool, TiB,
+                        build_cluster, small_test_cluster)
+from repro.core.clustergen import cluster_a
+from repro.core.planner import available_planners, create_planner
+from repro.core.shard import ShardedBatchPlanner, chunk_memory_stats
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def as_tuples(moves):
+    return [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in moves]
+
+
+def _pair(mk, **sharded_kwargs):
+    s1, s2 = mk(), mk()
+    serial = create_planner("equilibrium_batch", select_backend="ref")
+    sharded = create_planner("equilibrium_batch_sharded", **sharded_kwargs)
+    r1 = serial.plan(s1, record_trajectory=True)
+    r2 = sharded.plan(s2, record_trajectory=True)
+    return r1, r2
+
+
+# ---------------------------------------------------------------------------
+# in-process (1-device mesh; padding exercised via the pad override)
+
+
+def test_sharded_registered():
+    assert "equilibrium_batch_sharded" in available_planners()
+
+
+def test_sharded_matches_serial_mesh1():
+    for mk in (small_test_cluster, cluster_a):
+        r1, r2 = _pair(mk)
+        assert as_tuples(r1.moves) == as_tuples(r2.moves)
+        assert [r.variance_after for r in r1.records] \
+            == [r.variance_after for r in r2.records]
+        assert [r.sources_tried for r in r1.records] \
+            == [r.sources_tried for r in r2.records]
+        assert r2.stats["shards"] == 1
+        assert r2.stats["engine"] == "batch-sharded"
+
+
+def test_sharded_uneven_padding_mesh1():
+    """A padded device axis (pad devices are the fleet pack's neutral
+    device) must not perturb the sequence."""
+    for extra in (1, 3):
+        n = cluster_a().n_devices
+        r1, r2 = _pair(cluster_a, pad_devices=n + extra)
+        assert as_tuples(r1.moves) == as_tuples(r2.moves)
+        assert [r.variance_after for r in r1.records] \
+            == [r.variance_after for r in r2.records]
+
+
+def test_sharded_refuses_unsupported_knobs():
+    state = small_test_cluster()
+    with pytest.raises(ValueError, match="legality cache"):
+        ShardedBatchPlanner(state, EquilibriumConfig(), legality_cache=True)
+    with pytest.raises(ValueError, match="reference kernel"):
+        ShardedBatchPlanner(state, EquilibriumConfig(),
+                            select_backend="pallas")
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedBatchPlanner(state, EquilibriumConfig(),
+                            n_shards=len(jax.devices()) + 1)
+    # an override below the natural width is rejected when the carry pads
+    bp = ShardedBatchPlanner(state, EquilibriumConfig(), n_shards=1,
+                             pad_devices=4)
+    with pytest.raises(ValueError, match="required width"):
+        bp.plan(max_moves=2)
+
+
+def test_chunk_memory_stats_fields():
+    bp = ShardedBatchPlanner(cluster_a(), EquilibriumConfig())
+    mem = chunk_memory_stats(bp)
+    for key in ("argument_bytes", "output_bytes", "temp_bytes",
+                "alias_bytes", "peak_bytes"):
+        assert key in mem and mem[key] >= 0
+    # donated carry: the aliased in-place buffers are visible to XLA
+    assert mem["alias_bytes"] > 0
+
+
+@st.composite
+def shard_cluster(draw):
+    seed = draw(st.integers(0, 2**16))
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    n_hosts = draw(st.integers(4, 7))
+    devs = []
+    for h in range(n_hosts):
+        for _ in range(draw(st.integers(1, 2))):
+            cap = float(rng.choice([4, 8, 12])) * TiB
+            devs.append(Device(id=len(devs), capacity=cap,
+                               device_class="hdd", host=f"host{h}"))
+    total = sum(d.capacity for d in devs)
+    pools = [Pool(0, "a", draw(st.integers(8, 24)),
+                  PlacementRule.replicated(3, "host"),
+                  stored_bytes=draw(st.floats(0.1, 0.4)) * total / 3)]
+    pad = draw(st.integers(0, 3))
+    return build_cluster(devs, pools, seed=seed), pad
+
+
+@settings(max_examples=10, deadline=None)
+@given(case=shard_cluster())
+def test_property_sharded_equals_serial(case):
+    initial, pad = case
+    cfg = EquilibriumConfig(max_moves=60)
+    serial = create_planner("equilibrium_batch", cfg=cfg,
+                            select_backend="ref")
+    sharded = create_planner(
+        "equilibrium_batch_sharded", cfg=cfg,
+        pad_devices=initial.n_devices + pad if pad else None)
+    a = serial.plan(initial.copy(), record_trajectory=True)
+    b = sharded.plan(initial.copy(), record_trajectory=True)
+    assert as_tuples(a.moves) == as_tuples(b.moves)
+    assert [r.variance_after for r in a.records] \
+        == [r.variance_after for r in b.records]
+
+
+# ---------------------------------------------------------------------------
+# forced multi-device meshes (subprocess: device count is fixed per process)
+
+
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_sharded_bit_identity_forced_mesh(n_dev):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_dev} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env.pop("PYTHONPATH", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "shard_check.py"),
+         "--devices", str(n_dev)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    summary = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert summary["devices"] == n_dev
+    assert summary["checks"] >= 7 and summary["moves"] > 0

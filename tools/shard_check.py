@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Bit-identity harness for the sharded batch engine on a forced host mesh.
+
+JAX fixes the device count at process start, so mesh sizes other than 1
+cannot be exercised inside the main test process.  This script is spawned
+as a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+(tests/test_shard.py does this for N in {2, 4}; the CI shard-smoke job runs
+it directly) and asserts that :class:`repro.core.shard.ShardedBatchPlanner`
+reproduces the serial ``equilibrium_batch`` engine bit-for-bit:
+
+* identical move tuples, variance trajectories and sources-tried counts on
+  clusters whose device counts divide the mesh evenly and unevenly (mesh
+  padding exercised both ways);
+* with and without source-bound certificates;
+* across a warm restart after delta absorption (growth + device-out), i.e.
+  through the crop → absorb → re-pad path.
+
+Exit status 0 with a one-line JSON summary on stdout, non-zero with a
+traceback on any mismatch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def as_tuples(moves):
+    return [(m.pg, m.slot, m.src_osd, m.dst_osd) for m in moves]
+
+
+def check_pair(mk, *, budget=None, source_bounds=True, pad_devices=None,
+               n_shards=None):
+    """One serial-vs-sharded comparison on identically built states."""
+    from repro.core.planner import create_planner
+    s1, s2 = mk(), mk()
+    serial = create_planner("equilibrium_batch", select_backend="ref",
+                            source_bounds=source_bounds)
+    sharded = create_planner("equilibrium_batch_sharded",
+                             source_bounds=source_bounds,
+                             n_shards=n_shards, pad_devices=pad_devices)
+    r1 = serial.plan(s1, budget=budget, record_trajectory=True)
+    r2 = sharded.plan(s2, budget=budget, record_trajectory=True)
+    assert as_tuples(r1.moves) == as_tuples(r2.moves), \
+        f"move streams diverge: {as_tuples(r1.moves)[:4]} vs " \
+        f"{as_tuples(r2.moves)[:4]}"
+    assert [r.variance_after for r in r1.records] \
+        == [r.variance_after for r in r2.records], "variance trajectories"
+    assert [r.sources_tried for r in r1.records] \
+        == [r.sources_tried for r in r2.records], "sources_tried"
+    assert r1.stats["pruned_sources"] == r2.stats["pruned_sources"]
+    return len(r1.moves), (serial, sharded, s1, s2)
+
+
+def check_warm_absorb(mk):
+    """Warm continuation through delta absorption: plan a slice, mutate
+    the live states (growth + device out — absorbable, and out forces new
+    moves), plan again; both engines must stay warm and emit identical
+    continuations through the sharded crop → absorb → re-pad path."""
+    from repro.core.planner import create_planner
+    s1, s2 = mk(), mk()
+    serial = create_planner("equilibrium_batch", select_backend="ref")
+    sharded = create_planner("equilibrium_batch_sharded")
+    r1 = serial.plan(s1, budget=8, record_trajectory=True)
+    r2 = sharded.plan(s2, budget=8, record_trajectory=True)
+    assert as_tuples(r1.moves) == as_tuples(r2.moves)
+    pid = sorted(s1.pools)[0]
+    for s in (s1, s2):
+        s.grow_pool(pid, s.pools[pid].stored_bytes * 0.4)
+        s.mark_out(s.devices[-1].id, True)
+    r1b = serial.plan(s1, record_trajectory=True)
+    r2b = sharded.plan(s2, record_trajectory=True)
+    assert as_tuples(r1b.moves) == as_tuples(r2b.moves), "post-absorb moves"
+    assert [r.variance_after for r in r1b.records] \
+        == [r.variance_after for r in r2b.records]
+    assert r2b.stats["rebuilds"] == r1b.stats["rebuilds"], \
+        (r1b.stats["rebuilds"], r2b.stats["rebuilds"])
+    return len(r1b.moves)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="expected mesh size (asserts the forced host "
+                         "platform actually exposes this many devices)")
+    args = ap.parse_args()
+
+    import jax
+    n_dev = len(jax.devices())
+    if args.devices is not None and n_dev != args.devices:
+        print(f"expected {args.devices} devices, found {n_dev} — set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count="
+              f"{args.devices}", file=sys.stderr)
+        return 2
+
+    from repro.core import small_test_cluster
+    from repro.core.clustergen import cluster_a
+
+    summary = {"devices": n_dev, "checks": 0, "moves": 0}
+
+    # small_test_cluster: 16 devices (even at N in {1,2,4});
+    # cluster_a: 14 devices (uneven at 4 — exercises mesh padding)
+    for mk in (small_test_cluster, cluster_a):
+        for bounds in (True, False):
+            moves, _ = check_pair(mk, source_bounds=bounds)
+            summary["checks"] += 1
+            summary["moves"] += moves
+    # uneven padding forced regardless of mesh size via pad override
+    moves, _ = check_pair(cluster_a, pad_devices=n_dev * (14 // n_dev + 1))
+    summary["checks"] += 1
+    summary["moves"] += moves
+    # budget-bounded partial plan (stash/overshoot path)
+    moves, _ = check_pair(cluster_a, budget=7)
+    summary["checks"] += 1
+    summary["moves"] += moves
+    # warm restart across absorbed deltas
+    summary["moves"] += check_warm_absorb(cluster_a)
+    summary["checks"] += 1
+
+    print(json.dumps(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

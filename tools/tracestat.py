@@ -18,7 +18,11 @@ aggregate views the benchmarks and CI assert on:
 * ``fleet`` (``--fleet``) — tick rollup plus a per-cluster table (plan
   wall, freshness lag, SLO hits/misses) from the fleet planner's
   ``fleet.tick`` spans and the ``planner.plan`` / ``fleet.plan``
-  records nested under them.
+  records nested under them;
+* ``shards`` (``--shards``) — per-shard tile work from the
+  ``batch.shard.*{shard=N}`` counters (the kernel telemetry each mesh
+  participant streams off-device) and the dispatch-vs-sync split of the
+  ``batch.chunk`` spans (how much the pipelined dispatch overlapped).
 
 ``--validate`` schema-checks the records (exit 1 on problems) and
 ``--chrome OUT`` converts a JSONL trace for Perfetto / chrome://tracing.
@@ -189,6 +193,63 @@ def print_fleet(records: list[dict]) -> None:
               f"{'yes' if row['converged'] else 'no':>5s}")
 
 
+def shard_tables(records: list[dict]) -> tuple[dict, dict]:
+    """Sharded-planner views from the trace alone: per-shard tile work
+    from the ``batch.shard.*{shard=N}`` footer counters (the kernel's
+    on-device telemetry, streamed off with the chunk results) and the
+    dispatch-vs-sync split of every ``batch.chunk`` span (how much of
+    the chunk loop the pipelined dispatch overlapped).  Returns
+    (per-shard rows, chunk rollup)."""
+    counters = footer_counters(records)
+    per: dict[int, dict] = defaultdict(lambda: {
+        "tiles_walked": 0, "cand_tiles": 0, "wins": 0})
+    for k, v in counters.items():
+        name, _, label = k.partition("{")
+        if not name.startswith("batch.shard.") or not label:
+            continue
+        shard = int(label.rstrip("}").split("=", 1)[1])
+        per[shard][name[len("batch.shard."):]] = int(v)
+    chunks = {"chunks": 0, "overlapped": 0, "dispatch_s": 0.0,
+              "sync_s": 0.0, "wall_us": 0.0}
+    for r in records:
+        if r.get("ev") != "span" or r.get("name") != "batch.chunk":
+            continue
+        args = r.get("args", {})
+        chunks["chunks"] += 1
+        chunks["overlapped"] += int(bool(args.get("overlapped")))
+        chunks["dispatch_s"] += args.get("dispatch_s", 0.0)
+        chunks["sync_s"] += args.get("sync_s", 0.0)
+        chunks["wall_us"] += r.get("dur") or 0.0
+    return dict(per), chunks
+
+
+def print_shards(records: list[dict]) -> None:
+    per, chunks = shard_tables(records)
+    print("== shards ==")
+    if not per:
+        print("no batch.shard.* counters (serial engine, or no plan ran)")
+    else:
+        total = sum(row["tiles_walked"] for row in per.values()) or 1
+        print(f"{'shard':>5s} {'tiles_walked':>13s} {'cand_tiles':>11s} "
+              f"{'wins':>6s} {'tile share':>11s}")
+        for shard in sorted(per):
+            row = per[shard]
+            print(f"{shard:5d} {row['tiles_walked']:13d} "
+                  f"{row['cand_tiles']:11d} {row['wins']:6d} "
+                  f"{row['tiles_walked'] / total:10.2f}")
+    print("\n== chunk dispatch vs sync ==")
+    if not chunks["chunks"]:
+        print("no batch.chunk spans")
+        return
+    busy = chunks["dispatch_s"] + chunks["sync_s"]
+    print(f"chunks                {chunks['chunks']} "
+          f"({chunks['overlapped']} dispatched ahead, "
+          f"{chunks['overlapped'] / chunks['chunks']:.2f} overlap share)")
+    print(f"dispatch wall         {chunks['dispatch_s']:.3f}s "
+          f"({chunks['dispatch_s'] / busy if busy else 0.0:.2f} of busy)")
+    print(f"sync wall             {chunks['sync_s']:.3f}s")
+
+
 def print_bench_rows(records: list[dict]) -> None:
     """Recompute each bench.call row from its counter deltas alone."""
     print("== bench rows (from trace) ==")
@@ -218,6 +279,9 @@ def main() -> int:
     ap.add_argument("--fleet", action="store_true",
                     help="per-cluster fleet table (plan wall, freshness "
                          "lag, SLO hits/misses) from fleet.tick spans")
+    ap.add_argument("--shards", action="store_true",
+                    help="per-shard tile-work table and the chunk "
+                         "dispatch-vs-sync overlap split")
     ap.add_argument("--chrome", metavar="OUT", default=None,
                     help="write the Chrome/Perfetto conversion and exit")
     ap.add_argument("--top", type=int, default=12,
@@ -241,6 +305,9 @@ def main() -> int:
     if args.fleet:
         print()
         print_fleet(records)
+    if args.shards:
+        print()
+        print_shards(records)
     if args.bench:
         print()
         print_bench_rows(records)
