@@ -52,6 +52,7 @@ from .legality import LegalityState
 try:  # JAX is always present in this repo, but the numpy path is standalone.
     import jax
     import jax.numpy as jnp
+    from jax.experimental import enable_x64
     _HAVE_JAX = True
 except Exception:  # pragma: no cover
     _HAVE_JAX = False
@@ -614,15 +615,20 @@ def _pick_jax(dense: DenseState, rows: np.ndarray, src_idx: int,
     src_cnt = padded(dense.pool_counts[pool_rows, src_idx])
     src_ideal = padded(dense.ideal[pool_rows, src_idx])
 
-    i, d, found = _jax_select(
-        jnp.asarray(sizes), jnp.asarray(cls), jnp.asarray(member),
-        jnp.asarray(peer), jnp.asarray(own_dom_eq),
-        jnp.asarray(cnt), jnp.asarray(ideal),
-        jnp.asarray(src_cnt), jnp.asarray(src_ideal),
-        jnp.asarray(dense.used), jnp.asarray(dense.cap),
-        jnp.asarray(dense.util), dense.util_sum, dense.util_sumsq,
-        jnp.asarray(dense.dev_class), src_idx, cfg.count_slack,
-        cfg.headroom, cfg.min_variance_delta, n)
+    # bit-identity with the numpy/faithful engines requires the criteria
+    # math in float64 — without x64, jnp.asarray silently downcasts every
+    # float64 input to float32 and near-threshold count/variance tests can
+    # flip (caught by the lifecycle fuzzer under non-default count_slack)
+    with enable_x64():
+        i, d, found = _jax_select(
+            jnp.asarray(sizes), jnp.asarray(cls), jnp.asarray(member),
+            jnp.asarray(peer), jnp.asarray(own_dom_eq),
+            jnp.asarray(cnt), jnp.asarray(ideal),
+            jnp.asarray(src_cnt), jnp.asarray(src_ideal),
+            jnp.asarray(dense.used), jnp.asarray(dense.cap),
+            jnp.asarray(dense.util), dense.util_sum, dense.util_sumsq,
+            jnp.asarray(dense.dev_class), src_idx, cfg.count_slack,
+            cfg.headroom, cfg.min_variance_delta, n)
     if not bool(found):
         return None
     i = int(i)

@@ -65,7 +65,7 @@ __all__ = [
     "ClusterDelta", "MovementDelta", "PoolGrowthDelta", "DeviceAddDelta",
     "DeviceOutDelta", "PoolCreateDelta", "PlanResult", "Planner",
     "PlannerSpec", "register_planner", "create_planner", "get_planner_spec",
-    "available_planners",
+    "available_planners", "planners_in_class",
 ]
 
 
@@ -138,6 +138,10 @@ class PlannerSpec:
     factory: type | object           # callable returning a Planner
     sim_config_attr: str | None      # SimConfig field holding its config
     description: str = ""
+    #: differential-testing equivalence class: planners sharing a tag
+    #: must emit bitwise-identical move streams on the same input (the
+    #: fuzz harness enumerates a class via :func:`planners_in_class`)
+    equivalence: str | None = None
 
 
 _REGISTRY: dict[str, PlannerSpec] = {}
@@ -153,14 +157,16 @@ _LAZY_PLANNERS: dict[str, str] = {
 
 
 def register_planner(name: str, *, sim_config_attr: str | None = None,
-                     description: str = "", replace: bool = False):
+                     description: str = "", replace: bool = False,
+                     equivalence: str | None = None):
     """Class/factory decorator adding a planner to the registry."""
     def deco(factory):
         if name in _REGISTRY and not replace:
             raise ValueError(f"planner {name!r} already registered")
         _REGISTRY[name] = PlannerSpec(
             name, factory, sim_config_attr,
-            description or inspect.getdoc(factory) or "")
+            description or inspect.getdoc(factory) or "",
+            equivalence)
         return factory
     return deco
 
@@ -179,6 +185,25 @@ def get_planner_spec(name: str) -> PlannerSpec:
 def available_planners() -> tuple[str, ...]:
     """Registered planner names (lazy ones included), sorted."""
     return tuple(sorted(_REGISTRY.keys() | _LAZY_PLANNERS.keys()))
+
+
+def planners_in_class(equivalence: str) -> tuple[str, ...]:
+    """Registered planner names tagged with ``equivalence``, sorted.
+
+    Lazy planner modules are imported first so their registrations are
+    visible; one whose import fails (missing optional dependency) is
+    skipped rather than raised — differential consumers enumerate what
+    can actually run here.
+    """
+    import importlib
+    for name, module in _LAZY_PLANNERS.items():
+        if name not in _REGISTRY:
+            try:
+                importlib.import_module(module)
+            except Exception:            # pragma: no cover - optional deps
+                pass
+    return tuple(sorted(n for n, spec in _REGISTRY.items()
+                        if spec.equivalence == equivalence))
 
 
 def create_planner(name: str, **kwargs) -> Planner:
@@ -248,7 +273,8 @@ class _StatelessPlanner:
 
 
 @register_planner("equilibrium_faithful", sim_config_attr="equilibrium",
-                  description="paper-faithful §3.1 loop (semantic reference)")
+                  description="paper-faithful §3.1 loop (semantic reference)",
+                  equivalence="equilibrium")
 class FaithfulEquilibriumPlanner(_StatelessPlanner):
     """The paper's §3.1 planning loop, unchanged — the reference every
     vectorized engine is property-tested against."""
@@ -303,7 +329,8 @@ class _DensePlanner(_StatelessPlanner):
 
 @register_planner("equilibrium", sim_config_attr="equilibrium",
                   description="dense-NumPy Equilibrium (small-cluster "
-                              "default, no warm-up cost)")
+                              "default, no warm-up cost)",
+                  equivalence="equilibrium")
 class EquilibriumPlanner(_DensePlanner):
     name = "equilibrium"
     engine = "numpy"
@@ -311,7 +338,8 @@ class EquilibriumPlanner(_DensePlanner):
 
 @register_planner("equilibrium_jax_legacy", sim_config_attr="equilibrium",
                   description="first-generation per-source jitted path "
-                              "(benchmark baseline)")
+                              "(benchmark baseline)",
+                  equivalence="equilibrium")
 class LegacyJaxEquilibriumPlanner(_DensePlanner):
     name = "equilibrium_jax_legacy"
     engine = "jax-legacy"
@@ -321,7 +349,8 @@ class LegacyJaxEquilibriumPlanner(_DensePlanner):
                   description="device-resident chunked engine; warm-starts "
                               "across calls and absorbs every known delta "
                               "type (growth, add, out, movement, pool "
-                              "create) without a rebuild")
+                              "create) without a rebuild",
+                  equivalence="equilibrium")
 class BatchEquilibriumPlanner:
     """Protocol adapter over :class:`~repro.core.equilibrium_batch
     .BatchPlanner`.

@@ -763,7 +763,8 @@ def chunk_memory_stats(bp: BatchPlanner, telemetry: bool = False) -> dict:
                   description="batch engine with the chunk step shard_map-"
                               "ped over the visible device mesh (device-"
                               "axis partitioned legality tiles; bit-"
-                              "identical to equilibrium_batch)")
+                              "identical to equilibrium_batch)",
+                  equivalence="equilibrium")
 class ShardedBatchEquilibriumPlanner(BatchEquilibriumPlanner):
     """Protocol adapter over :class:`ShardedBatchPlanner` — the sharded
     twin of the ``equilibrium_batch`` registry entry (same protocol

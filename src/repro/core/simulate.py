@@ -146,6 +146,14 @@ class MovementThrottle:
         self.transferred_bytes = 0.0
         self.completed_moves = 0
         self.cancelled_moves = 0
+        # byte ledger (conservation oracle): every enqueued byte ends up
+        # completed, cancelled or still live; every transferred byte ends
+        # up as completed progress, discarded progress or live progress
+        self.enqueued_bytes = 0.0
+        self.completed_bytes = 0.0
+        self.completed_progress_bytes = 0.0
+        self.cancelled_bytes = 0.0
+        self.discarded_bytes = 0.0
 
     # -- queue management ---------------------------------------------------
 
@@ -162,6 +170,7 @@ class MovementThrottle:
                 self.cancelled_moves += 1
                 holder, holds = old.holder, old.src_holds
             self.pending.append(_Transfer(mv, float(mv.size), holds, holder))
+            self.enqueued_bytes += float(mv.size)
 
     def _find_shard(self, pg, slot) -> _Transfer | None:
         for t in self.in_flight:
@@ -177,12 +186,18 @@ class MovementThrottle:
             self.in_flight.remove(tr)
         else:
             self.pending.remove(tr)
+        self.cancelled_bytes += float(tr.mv.size)
+        self.discarded_bytes += float(tr.mv.size) - tr.remaining
 
     def cancel_to(self, osd_id: int) -> int:
         """Drop transfers destined for a device that just died; the shard's
         new recovery move supersedes them.  Partially transferred bytes
         stay counted (they were moved, then lost)."""
         n0 = len(self.pending) + len(self.in_flight)
+        for t in list(self.pending) + self.in_flight:
+            if t.mv.dst_osd == osd_id:
+                self.cancelled_bytes += float(t.mv.size)
+                self.discarded_bytes += float(t.mv.size) - t.remaining
         self.pending = deque(t for t in self.pending
                              if t.mv.dst_osd != osd_id)
         self.in_flight = [t for t in self.in_flight if t.mv.dst_osd != osd_id]
@@ -239,6 +254,8 @@ class MovementThrottle:
                 moved += got
             if t.remaining <= 1e-6:
                 self.completed_moves += 1
+                self.completed_bytes += float(t.mv.size)
+                self.completed_progress_bytes += float(t.mv.size) - t.remaining
             else:
                 still.append(t)
         self.in_flight = still
@@ -246,6 +263,43 @@ class MovementThrottle:
         return moved
 
     # -- accounting ---------------------------------------------------------
+
+    def check_conservation(self, rel: float = 1e-9) -> dict:
+        """Assert the two byte-conservation invariants and return the
+        ledger.
+
+        * **queue**: every enqueued byte is completed, cancelled
+          (superseded mid-backfill or dropped by :meth:`cancel_to`) or
+          still live in the queue;
+        * **flow**: every byte :meth:`tick` reported as transferred is
+          completed progress, discarded progress of a cancelled transfer,
+          or live progress of an in-flight one.
+
+        Exact up to float summation order, hence the relative tolerance.
+        """
+        live = list(self.pending) + self.in_flight
+        live_size = sum(float(t.mv.size) for t in live)
+        live_progress = sum(float(t.mv.size) - t.remaining for t in live)
+        ledger = {
+            "enqueued_bytes": self.enqueued_bytes,
+            "completed_bytes": self.completed_bytes,
+            "cancelled_bytes": self.cancelled_bytes,
+            "live_bytes": live_size,
+            "transferred_bytes": self.transferred_bytes,
+            "completed_progress_bytes": self.completed_progress_bytes,
+            "discarded_bytes": self.discarded_bytes,
+            "live_progress_bytes": live_progress,
+        }
+        queue_rhs = self.completed_bytes + self.cancelled_bytes + live_size
+        scale = max(abs(self.enqueued_bytes), abs(queue_rhs), 1.0)
+        assert abs(self.enqueued_bytes - queue_rhs) <= rel * scale, \
+            f"throttle queue conservation violated: {ledger}"
+        flow_rhs = (self.completed_progress_bytes + self.discarded_bytes
+                    + live_progress)
+        scale = max(abs(self.transferred_bytes), abs(flow_rhs), 1.0)
+        assert abs(self.transferred_bytes - flow_rhs) <= rel * scale, \
+            f"throttle flow conservation violated: {ledger}"
+        return ledger
 
     def physical_used(self, state: ClusterState) -> np.ndarray:
         """Per-device *physical* bytes: the state's target occupancy plus

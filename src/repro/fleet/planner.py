@@ -86,7 +86,8 @@ def _plan_fleet_chunk(dyn, const, slack, headroom, min_dvar, n_real, k_eff,
                   description="vmapped multi-cluster engine: shape-bucketed "
                               "fleets planned by one dispatch per bucket, "
                               "with per-cluster move budgets, streaming "
-                              "delta absorption and an optional latency SLO")
+                              "delta absorption and an optional latency SLO",
+                  equivalence="equilibrium")
 class FleetPlanner:
     """Plan N independent clusters with one vmapped engine.
 

@@ -1,0 +1,75 @@
+"""Intentionally-broken legality predicates (mutation smoke).
+
+The fuzz harness is only trustworthy if it *catches* a broken planner.
+Each mutation here patches one predicate in :mod:`repro.core.legality`
+to a vacuous always-true form; every engine calls the predicates as
+module attributes (``legality.X(...)``), so the patch reaches the
+faithful and dense-NumPy engines at call time — and the jitted engines
+at trace time, in a fresh process.  The independent oracles in
+:mod:`repro.fuzz.harness` (:meth:`ClusterState.move_is_legal` replay,
+monotone-variance recompute) share no code with the patched module, so
+a mutation that changes planner behaviour must trip an oracle.
+
+``tools/fuzz.py --mutate <name>`` proves it: sweep seeds under the
+mutation until an oracle fires, shrink the reproducer, and fail unless
+the shrunk timeline is small (CI asserts ≤ 12 events).
+
+The patch is an attribute store on the legality module — deliberately
+not a ``def``/assignment of a legality name inside ``src/`` (which
+``tools/check_legality.py`` forbids).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from ..core import legality as _legality
+
+__all__ = ["MUTATIONS", "mutated"]
+
+#: mutation name -> (legality attribute, vacuous replacement).  The
+#: replacements keep the original's broadcast shape (they compute with
+#: the same operands) so jit traces still close.
+MUTATIONS: dict[str, tuple[str, object]] = {
+    # §3.1 acceptance gone: every candidate "improves" variance.  Caught
+    # by the monotone-variance replay oracle on nearly any timeline with
+    # a rebalance tick.
+    "variance_always_improves": (
+        "variance_improves",
+        lambda used_src, used_dst, cap_src, cap_dst, util_src, util_dst,
+               size, util_sum, util_sumsq, n_dev, min_variance_delta:
+            (used_dst + size) < float("inf")),
+    # capacity ceiling gone: destinations may be planned beyond their
+    # usable bytes.  Caught by the move_is_legal replay oracle once a
+    # timeline pushes some device near full.
+    "capacity_unbounded": (
+        "capacity_ok",
+        lambda used, cap_limit, size: (used + size) < float("inf")),
+    # device-class fencing gone: cross-class destinations become
+    # eligible.  Caught by the move_is_legal replay oracle when the
+    # planner takes one (requires a mixed-class timeline where an
+    # off-class destination also passes the count/variance criteria).
+    "class_blind": (
+        "class_ok",
+        lambda shard_class, dev_class:
+            (shard_class < 0) | (dev_class == dev_class)),
+}
+
+
+@contextmanager
+def mutated(name: str):
+    """Apply one mutation for the duration of the context.
+
+    Restores the original attribute on exit.  Note the already-jitted
+    traces of the batch engines in *this* process keep their healthy
+    HLO — in-process mutation runs should stick to the host engines
+    (``equilibrium``, ``equilibrium_faithful``); the CLI runs mutations
+    in a fresh process where every engine traces the mutant.
+    """
+    attr, fn = MUTATIONS[name]
+    original = getattr(_legality, attr)
+    setattr(_legality, attr, fn)
+    try:
+        yield
+    finally:
+        setattr(_legality, attr, original)

@@ -8,8 +8,11 @@ moving target (``BALANCERS`` mirrors that registry).  See
 """
 
 from .engine import ScenarioEngine, SimConfig
-from .events import (DeviceAdd, DeviceFail, DeviceOut, Event, HostAdd,
-                     PoolCreate, PoolGrowth, RebalanceTick)
+from .events import (DeviceAdd, DeviceFail, DeviceOut, Event,
+                     ForeignMovement, HostAdd, PoolCreate, PoolGrowth,
+                     RebalanceTick)
+from .generate import (PROFILES, FuzzProfile, GeneratedTimeline,
+                       fuzz_cluster, generate_timeline, timeline_from_dict)
 from .metrics import MetricsCollector
 from .scenarios import SCENARIOS, Scenario, register, run_scenario
 
@@ -24,6 +27,8 @@ def __getattr__(name: str):
 __all__ = [
     "BALANCERS", "ScenarioEngine", "SimConfig", "Event", "PoolGrowth",
     "PoolCreate", "DeviceAdd", "HostAdd", "DeviceOut", "DeviceFail",
-    "RebalanceTick", "MetricsCollector", "SCENARIOS", "Scenario",
-    "register", "run_scenario",
+    "ForeignMovement", "RebalanceTick", "MetricsCollector", "SCENARIOS",
+    "Scenario", "register", "run_scenario", "FuzzProfile", "PROFILES",
+    "GeneratedTimeline", "fuzz_cluster", "generate_timeline",
+    "timeline_from_dict",
 ]

@@ -48,8 +48,9 @@ from ..core.planner import (Planner, available_planners, create_planner,
                             get_planner_spec)
 from ..core.simulate import MovementThrottle, ThrottleConfig
 from .. import obs as _obs
-from .events import (DeviceAdd, DeviceFail, DeviceOut, Event, HostAdd,
-                     PoolCreate, PoolGrowth, RebalanceTick)
+from .events import (DeviceAdd, DeviceFail, DeviceOut, Event,
+                     ForeignMovement, HostAdd, PoolCreate, PoolGrowth,
+                     RebalanceTick)
 from .metrics import MetricsCollector
 
 
@@ -212,6 +213,8 @@ class ScenarioEngine:
             self._drain(ev.osd_id, lost=True)
         elif isinstance(ev, PoolCreate):
             self._create_pool(ev)
+        elif isinstance(ev, ForeignMovement):
+            self._foreign(ev.count)
         else:
             raise TypeError(f"unhandled event {ev!r}")
 
@@ -256,6 +259,30 @@ class ScenarioEngine:
         weights = np.array([d.capacity for d in cands], dtype=np.float64)
         weights /= weights.sum()
         return cands[int(self.rng.choice(len(cands), p=weights))].id
+
+    def _foreign(self, count: int) -> None:
+        """Apply ``count`` seeded random legal movements that did not come
+        from the scenario's planner — cross-client upmap traffic.  Each
+        draw picks a shard uniformly, then a capacity-weighted legal
+        destination; draws with no legal destination are retried a few
+        times and then skipped (a full cluster simply sees less foreign
+        churn)."""
+        moves: list[Movement] = []
+        pgs = sorted(self.state.acting)
+        for _ in range(count):
+            for _attempt in range(8):
+                pg = pgs[int(self.rng.integers(len(pgs)))]
+                slot = int(self.rng.integers(len(self.state.acting[pg])))
+                dst = self._pick_destination(pg, slot)
+                if dst is None:
+                    continue
+                src = self.state.acting[pg][slot]
+                mv = Movement(pg, slot, src, dst,
+                              self.state.shard_sizes[pg])
+                self.state.apply(mv)
+                moves.append(mv)
+                break
+        self.throttle.enqueue(moves)
 
     def _drain(self, osd_id: int, lost: bool) -> None:
         """Re-place every shard off a failed/out device; transfers go

@@ -18,6 +18,9 @@ against a :class:`repro.core.ClusterState`:
   transferred off (the device keeps serving until each transfer lands).
 * :class:`DeviceFail` — abrupt loss: weight to 0, physical bytes gone,
   shards re-placed with recovery reads from surviving peers.
+* :class:`ForeignMovement` — interleaved upmaps from outside the
+  balancer (seeded random legal movements), the cross-client traffic a
+  warm planner must absorb without a rebuild.
 * :class:`RebalanceTick` — invoke the scenario's registered balancer with
   a per-tick move budget.
 """
@@ -103,6 +106,17 @@ class DeviceFail(Event):
     """Abrupt loss: the OSD's data is gone; recovery re-reads from peers."""
 
     osd_id: int = -1
+
+
+@dataclass(frozen=True)
+class ForeignMovement(Event):
+    """``count`` random-but-legal shard movements applied outside any
+    planner — another client of the upmap channel (a manual ``ceph osd
+    pg-upmap-items``, a different balancer module).  Drawn from the
+    engine's seeded rng, applied to the target map and backfilled
+    through the throttle like any planner move."""
+
+    count: int = 1
 
 
 @dataclass(frozen=True)

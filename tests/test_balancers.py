@@ -205,9 +205,28 @@ def random_cluster(draw):
     return build_cluster(devs, [pool], seed=seed)
 
 
-@settings(max_examples=20, deadline=None)
-@given(initial=random_cluster())
-def test_property_equilibrium_invariants(initial):
+def seeded_random_cluster(seed):
+    """Deterministic twin of the :func:`random_cluster` strategy: the
+    same cluster family, every draw driven by one seeded generator."""
+    rng = np.random.default_rng((seed, 0xBA1A))
+    n_hosts = int(rng.integers(4, 8))
+    osds_per_host = int(rng.integers(1, 3))
+    devs = []
+    for h in range(n_hosts):
+        for _ in range(osds_per_host):
+            cap = float(rng.choice([4, 8, 16])) * TiB
+            devs.append(Device(id=len(devs), capacity=cap, device_class="hdd",
+                               host=f"host{h}"))
+    size = int(rng.integers(2, min(3, n_hosts) + 1))
+    pg_count = int(rng.integers(8, 41))
+    total_cap = sum(d.capacity for d in devs)
+    fill = float(rng.uniform(0.2, 0.6))
+    pool = Pool(0, "p", pg_count, PlacementRule.replicated(size, "host"),
+                stored_bytes=fill * total_cap / size)
+    return build_cluster(devs, [pool], seed=seed)
+
+
+def _check_equilibrium_invariants(initial):
     state = initial.copy()
     moves, _ = equilibrium_balance(state, EquilibriumConfig(max_moves=200))
     # 1. all moves legal in sequence; 2. variance non-increasing;
@@ -224,9 +243,7 @@ def test_property_equilibrium_invariants(initial):
     assert (replay.utilization() <= np.maximum(initial.utilization().max(), 1.0) + 1e-9).all()
 
 
-@settings(max_examples=20, deadline=None)
-@given(initial=random_cluster())
-def test_property_mgr_invariants(initial):
+def _check_mgr_invariants(initial):
     state = initial.copy()
     moves, _ = mgr_balance(state, MgrBalancerConfig(max_moves=300))
     replay = initial.copy()
@@ -234,3 +251,29 @@ def test_property_mgr_invariants(initial):
         assert replay.move_is_legal(mv.pg, mv.slot, mv.dst_osd)
         replay.apply(mv)
     replay.check_valid()
+
+
+# deterministic spine (hypothesis is optional in the container image)
+_CLUSTER_SEEDS = [0, 3, 8, 15, 21, 34]
+
+
+@pytest.mark.parametrize("seed", _CLUSTER_SEEDS)
+def test_equilibrium_invariants_cases(seed):
+    _check_equilibrium_invariants(seeded_random_cluster(seed))
+
+
+@pytest.mark.parametrize("seed", _CLUSTER_SEEDS)
+def test_mgr_invariants_cases(seed):
+    _check_mgr_invariants(seeded_random_cluster(seed))
+
+
+@settings(max_examples=20, deadline=None)
+@given(initial=random_cluster())
+def test_property_equilibrium_invariants(initial):
+    _check_equilibrium_invariants(initial)
+
+
+@settings(max_examples=20, deadline=None)
+@given(initial=random_cluster())
+def test_property_mgr_invariants(initial):
+    _check_mgr_invariants(initial)

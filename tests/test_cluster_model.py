@@ -136,14 +136,7 @@ def test_utilization_variance_by_class():
     assert st_.utilization_variance() >= 0
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    n_hosts=st.integers(4, 8),
-    pg_count=st.integers(4, 48),
-    size=st.integers(2, 3),
-    seed=st.integers(0, 2**16),
-)
-def test_random_clusters_valid(n_hosts, pg_count, size, seed):
+def _check_cluster_valid(n_hosts, pg_count, size, seed):
     devs = make_devices(n_hosts=n_hosts)
     pool = Pool(0, "p", pg_count, PlacementRule.replicated(size, "host"),
                 stored_bytes=0.4 * n_hosts * 2 * 8 * TiB / size)
@@ -152,11 +145,40 @@ def test_random_clusters_valid(n_hosts, pg_count, size, seed):
     assert (st_.utilization() >= 0).all()
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**16))
-def test_placement_deterministic(seed):
+def _check_placement_deterministic(seed):
     devs = make_devices()
     pool = Pool(0, "p", 8, PlacementRule.replicated(3, "host"), stored_bytes=TiB)
     a = place_pg(devs, pool, 3, seed=seed)
     b = place_pg(devs, pool, 3, seed=seed)
     assert a == b
+
+
+# deterministic spine (hypothesis is optional in the container image)
+@pytest.mark.parametrize("n_hosts,pg_count,size,seed", [
+    (4, 4, 2, 0), (5, 17, 3, 101), (6, 33, 2, 4096),
+    (7, 48, 3, 31337), (8, 24, 3, 65535),
+])
+def test_cluster_valid_cases(n_hosts, pg_count, size, seed):
+    _check_cluster_valid(n_hosts, pg_count, size, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 4242, 65535])
+def test_placement_deterministic_cases(seed):
+    _check_placement_deterministic(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_hosts=st.integers(4, 8),
+    pg_count=st.integers(4, 48),
+    size=st.integers(2, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_random_clusters_valid(n_hosts, pg_count, size, seed):
+    _check_cluster_valid(n_hosts, pg_count, size, seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_placement_deterministic(seed):
+    _check_placement_deterministic(seed)

@@ -102,13 +102,43 @@ def het_cluster(draw):
     return build_cluster(devs, pools, seed=seed)
 
 
-@settings(max_examples=15, deadline=None)
-@given(initial=het_cluster())
-def test_property_fast_equals_faithful(initial):
+def seeded_het_cluster(seed):
+    """Deterministic twin of the :func:`het_cluster` strategy."""
+    rng = np.random.default_rng((seed, 0x4E7))
+    n_hosts = int(rng.integers(4, 9))
+    devs = []
+    for h in range(n_hosts):
+        for _ in range(int(rng.integers(1, 3))):
+            cap = float(rng.choice([4, 8, 12])) * TiB
+            devs.append(Device(id=len(devs), capacity=cap,
+                               device_class="hdd", host=f"host{h}"))
+    total = sum(d.capacity for d in devs)
+    pools = [Pool(0, "a", int(rng.integers(8, 33)),
+                  PlacementRule.replicated(3, "host"),
+                  stored_bytes=float(rng.uniform(0.1, 0.4)) * total / 3),
+             Pool(1, "b", int(rng.integers(4, 17)),
+                  PlacementRule.replicated(2, "host"),
+                  stored_bytes=float(rng.uniform(0.05, 0.2)) * total / 2)]
+    return build_cluster(devs, pools, seed=seed)
+
+
+def _check_fast_equals_faithful(initial):
     cfg = EquilibriumConfig(max_moves=150)
     a, _ = equilibrium_balance(initial.copy(), cfg)
     b, _ = balance_fast(initial.copy(), cfg)
     assert as_tuples(a) == as_tuples(b)
+
+
+# deterministic spine (hypothesis is optional in the container image)
+@pytest.mark.parametrize("seed", [0, 11, 29, 83])
+def test_fast_equals_faithful_cases(seed):
+    _check_fast_equals_faithful(seeded_het_cluster(seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(initial=het_cluster())
+def test_property_fast_equals_faithful(initial):
+    _check_fast_equals_faithful(initial)
 
 
 def test_fast_is_faster_on_cluster_a():

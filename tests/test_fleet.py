@@ -168,6 +168,16 @@ def test_fleet_slo_cutoff_stream_identical():
                          slo_cut_tick=1, drain=12)
 
 
+# deterministic spine (hypothesis is optional in the container image)
+@pytest.mark.parametrize("seed_base,sizes,cut", [
+    (0, [9, 12, 9], 1),
+])
+def test_fleet_matches_serial_cases(seed_base, sizes, cut):
+    specs = [(n, seed_base + i) for i, n in enumerate(sizes)]
+    _run_fleet_vs_serial(specs, ticks=3, budget=CH,
+                         slo_cut_tick=1 if cut else None, drain=12)
+
+
 @settings(max_examples=3, deadline=None)
 @given(st.integers(min_value=0, max_value=10_000),
        st.lists(st.sampled_from([9, 12]), min_size=3, max_size=4),
@@ -304,6 +314,86 @@ def test_fleet_service_tick_and_ingest():
         as_tuples(sy.plan(b2, budget=CH).moves)
     svc.detach("y")
     assert set(svc.tick({"x": CH}).results) == {"x"}
+
+
+def test_fleet_service_detach_midstream_and_reattach():
+    """Full daemon lifecycle on one lane: attach → delta stream + ticks
+    (absorb-only, one rebuild at pack time), detach mid-stream while
+    deltas are still arriving, then re-attach the same lifecycle — the
+    re-pack costs exactly one rebuild, and the lane's plans match a
+    serial twin planner fed the same mutations throughout."""
+    from repro.core.equilibrium_batch import dense_rebuild_count
+
+    svc = FleetService(chunk=CH, row_block=RB)
+    a, b = _twin_pair(9, 31)
+    serial = _serial_planner()
+
+    before = dense_rebuild_count()
+    svc.attach("lane", a)
+    svc.tick({"lane": CH})
+    serial.plan(b, budget=CH)
+    assert dense_rebuild_count() - before >= 1     # the initial pack
+
+    # streamed mutations absorb: no further rebuilds across ticks
+    after_pack = dense_rebuild_count()
+    for t in range(2):
+        _mutate(t, 0, a)
+        _mutate(t, 0, b)
+        tick = svc.tick({"lane": CH})
+        assert as_tuples(tick.results["lane"].moves) == \
+            as_tuples(serial.plan(b, budget=CH).moves)
+    assert dense_rebuild_count() == after_pack
+
+    # detach mid-stream: the lane is gone, but its state keeps mutating
+    # (the cluster lives on without the balancer)
+    svc.detach("lane")
+    assert set(svc.tick({}).results) == set()
+    _mutate(2, 0, a)
+    _mutate(2, 0, b)
+
+    # re-attach the same lifecycle: exactly one rebuild (the new pack),
+    # and the plans pick up bit-identical to a serial planner rebuilt on
+    # the mutated state
+    before_reattach = dense_rebuild_count()
+    svc.attach("lane", a)
+    tick = svc.tick({"lane": CH})
+    assert dense_rebuild_count() - before_reattach == 1
+    fresh = _serial_planner()
+    b2 = b.copy()
+    assert as_tuples(tick.results["lane"].moves) == \
+        as_tuples(fresh.plan(b2, budget=CH).moves)
+
+    # and the re-attached lane absorbs again: further ticks rebuild-free
+    steady = dense_rebuild_count()
+    _mutate(3, 0, a)
+    _mutate(3, 0, b2)
+    tick = svc.tick({"lane": CH})
+    assert as_tuples(tick.results["lane"].moves) == \
+        as_tuples(fresh.plan(b2, budget=CH).moves)
+    assert dense_rebuild_count() == steady
+
+
+def test_fleet_service_ingest_routes_out_of_band_deltas():
+    """ingest() feeds a lane deltas that did not come from the attached
+    state object's own subscription (a mirrored cluster's log): absorbable
+    deltas return True and the next tick reflects them."""
+    from repro.core.cluster import PoolGrowthDelta
+
+    svc = FleetService(chunk=CH, row_block=RB)
+    a, b = _twin_pair(9, 33)
+    svc.attach("m", a)
+    svc.tick({"m": CH})
+    serial = _serial_planner()
+    serial.plan(b, budget=CH)
+    # mutate the attached state silently-equivalently on the twin, then
+    # hand the service the twin's delta out-of-band
+    a.grow_pool(0, 256 * GiB)
+    b.grow_pool(0, 256 * GiB)
+    delta = PoolGrowthDelta(a.mutation_epoch, 0, 256 * GiB)
+    assert svc.ingest("m", delta) is True      # deduped by epoch, absorbs
+    tick = svc.tick({"m": CH})
+    assert as_tuples(tick.results["m"].moves) == \
+        as_tuples(serial.plan(b, budget=CH).moves)
 
 
 def test_fleet_pack_lane_reuse():

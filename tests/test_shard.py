@@ -117,10 +117,25 @@ def shard_cluster(draw):
     return build_cluster(devs, pools, seed=seed), pad
 
 
-@settings(max_examples=10, deadline=None)
-@given(case=shard_cluster())
-def test_property_sharded_equals_serial(case):
-    initial, pad = case
+def seeded_shard_cluster(seed):
+    """Deterministic twin of the :func:`shard_cluster` strategy."""
+    import numpy as np
+    rng = np.random.default_rng((seed, 0x5AD))
+    n_hosts = int(rng.integers(4, 8))
+    devs = []
+    for h in range(n_hosts):
+        for _ in range(int(rng.integers(1, 3))):
+            cap = float(rng.choice([4, 8, 12])) * TiB
+            devs.append(Device(id=len(devs), capacity=cap,
+                               device_class="hdd", host=f"host{h}"))
+    total = sum(d.capacity for d in devs)
+    pools = [Pool(0, "a", int(rng.integers(8, 25)),
+                  PlacementRule.replicated(3, "host"),
+                  stored_bytes=float(rng.uniform(0.1, 0.4)) * total / 3)]
+    return build_cluster(devs, pools, seed=seed), int(rng.integers(0, 4))
+
+
+def _check_sharded_equals_serial(initial, pad):
     cfg = EquilibriumConfig(max_moves=60)
     serial = create_planner("equilibrium_batch", cfg=cfg,
                             select_backend="ref")
@@ -132,6 +147,20 @@ def test_property_sharded_equals_serial(case):
     assert as_tuples(a.moves) == as_tuples(b.moves)
     assert [r.variance_after for r in a.records] \
         == [r.variance_after for r in b.records]
+
+
+# deterministic spine (hypothesis is optional in the container image)
+@pytest.mark.parametrize("seed", [0, 13])
+def test_sharded_equals_serial_cases(seed):
+    initial, pad = seeded_shard_cluster(seed)
+    _check_sharded_equals_serial(initial, pad)
+
+
+@settings(max_examples=10, deadline=None)
+@given(case=shard_cluster())
+def test_property_sharded_equals_serial(case):
+    initial, pad = case
+    _check_sharded_equals_serial(initial, pad)
 
 
 # ---------------------------------------------------------------------------

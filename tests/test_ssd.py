@@ -115,12 +115,24 @@ def test_decode_step_matches_recurrence_tail():
     np.testing.assert_allclose(np.asarray(state), h_ref, rtol=2e-4, atol=2e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**16), chunk=st.sampled_from([4, 8, 16]),
-       superchunk=st.sampled_from([1, 2, 4]))
-def test_property_duality(seed, chunk, superchunk):
+def _check_duality(seed, chunk, superchunk):
     x, dt, A, Bm, Cm = make_inputs(jax.random.PRNGKey(seed), T=16)
     y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk, superchunk=superchunk)
     y_ref, _ = naive_recurrence(x, dt, A, Bm, Cm)
     np.testing.assert_allclose(np.asarray(y, np.float64), y_ref,
                                rtol=3e-4, atol=3e-4)
+
+
+# deterministic spine (hypothesis is optional in the container image)
+@pytest.mark.parametrize("seed,chunk,superchunk", [
+    (0, 4, 1), (123, 8, 2), (9999, 16, 4),
+])
+def test_duality_cases(seed, chunk, superchunk):
+    _check_duality(seed, chunk, superchunk)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), chunk=st.sampled_from([4, 8, 16]),
+       superchunk=st.sampled_from([1, 2, 4]))
+def test_property_duality(seed, chunk, superchunk):
+    _check_duality(seed, chunk, superchunk)

@@ -82,11 +82,40 @@ def check_warm_absorb(mk):
     return len(r1b.moves)
 
 
+def run_timeline_lane(path: str, balancer: str) -> int:
+    """Fuzz-harness subprocess lane: run one serialized timeline with
+    ``balancer`` under the in-lane oracles (legality replay, monotone
+    variance, throttle conservation) and print the move-stream and
+    metrics hashes the parent compares against its reference lane."""
+    import hashlib
+
+    from repro.fuzz.corpus import load_timeline
+    from repro.fuzz.harness import run_lane
+
+    lane = run_lane(load_timeline(path), balancer)
+    print(json.dumps({
+        "balancer": balancer,
+        "moves_sha": hashlib.sha256(
+            json.dumps(lane.moves).encode()).hexdigest(),
+        "metrics_sha": hashlib.sha256(
+            lane.metrics_json.encode()).hexdigest(),
+        "n_moves": len(lane.moves),
+        "rebuilds": lane.rebuilds,
+    }))
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--devices", type=int, default=None,
                     help="expected mesh size (asserts the forced host "
                          "platform actually exposes this many devices)")
+    ap.add_argument("--timeline", metavar="FILE", default=None,
+                    help="run one serialized fuzz timeline with the "
+                         "sharded engine instead of the built-in checks; "
+                         "prints move/metrics hashes for the parent")
+    ap.add_argument("--balancer", default="equilibrium_batch_sharded",
+                    help="planner for the --timeline lane")
     args = ap.parse_args()
 
     import jax
@@ -96,6 +125,9 @@ def main() -> int:
               f"XLA_FLAGS=--xla_force_host_platform_device_count="
               f"{args.devices}", file=sys.stderr)
         return 2
+
+    if args.timeline is not None:
+        return run_timeline_lane(args.timeline, args.balancer)
 
     from repro.core import small_test_cluster
     from repro.core.clustergen import cluster_a
